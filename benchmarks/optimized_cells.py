@@ -1,0 +1,71 @@
+"""Run the three hillclimbed cells with the beyond-paper optimizations and
+emit the baseline-vs-optimized comparison for EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.optimized_cells
+
+Baseline = the corrected framework (activation constraints, dense MoE
+dispatch) from experiments/dryrun/*_pod.json; optimized runs land in
+experiments/optimized/.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASE = ROOT / "experiments" / "dryrun"
+OPT = ROOT / "experiments" / "optimized"
+
+CELLS = [
+    # (arch, shape, overrides-builder, tag)
+    ("mixtral_8x7b", "prefill_32k", "gather", "moe-gather dispatch"),
+    ("mixtral_8x7b", "train_4k", "gather", "moe-gather dispatch"),
+    ("command_r_plus_104b", "prefill_32k", None,
+     "constraints only (no further confirmed mover)"),
+    ("tinyllama_1_1b", "train_4k", None,
+     "constraints only (remat/kv knobs refuted)"),
+]
+
+
+def overrides_for(kind, cfg):
+    if kind == "gather":
+        return {"moe": dc.replace(cfg.moe, dispatch="gather")}
+    return None
+
+
+def main():
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+
+    rows = []
+    for arch, shape, okind, tag in CELLS:
+        cfg = get_config(arch)
+        ov = overrides_for(okind, cfg)
+        base = json.loads((BASE / f"{arch}_{shape}_pod.json").read_text())
+        if ov is None:
+            rec = base
+        else:
+            rec = run_cell(arch, shape, False, OPT, overrides=ov)
+        rows.append((arch, shape, tag, base, rec))
+
+    print("\n| cell | change | t_comp (s) | t_mem (s) | t_coll (s) | "
+          "bottleneck | roofline frac |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, shape, tag, base, rec in rows:
+        for label, r in (("baseline", base),
+                         ("optimized" if r_is_diff(base, rec) else "(= baseline)", rec)):
+            print(f"| {arch}/{shape} | {label}: {tag if label != 'baseline' else 'dense/corrected'} | "
+                  f"{r['t_compute']:.3g} | {r['t_memory']:.3g} | "
+                  f"{r['t_collective']:.3g} | {r['bottleneck']} | "
+                  f"{r['roofline_fraction']:.4f} |")
+            if r is rec and r is base:
+                break
+
+
+def r_is_diff(a, b):
+    return a is not b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""One benchmark per paper table/figure.
+
+Each function reproduces one artifact and returns (rows, paper_claims) so
+``benchmarks/run.py`` can print the reproduction next to the paper's number.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# Fig 5 — §V-C elasticity use case
+# ----------------------------------------------------------------------
+def bench_fig5_elasticity() -> Tuple[List[dict], Dict[str, float]]:
+    from repro.core.hw.system import (ElasticUseCase, PAPER_CASE1_MS,
+                                      PAPER_CASE3_MS)
+    uc = ElasticUseCase()
+    rows = []
+    for case, ms in uc.figure5().items():
+        res = uc.run_case(case)
+        rows.append({"case": case, "total_ms": round(ms, 3),
+                     "fpga_ms": round(res.fpga_ms, 4),
+                     "cpu_ms": round(res.cpu_ms, 3),
+                     "data_ok": res.data_ok})
+    return rows, {"paper_case1_ms": PAPER_CASE1_MS,
+                  "paper_case3_ms": PAPER_CASE3_MS}
+
+
+# ----------------------------------------------------------------------
+# §V-D — dynamic bandwidth allocation (quota 16 -> 128)
+# ----------------------------------------------------------------------
+def bench_bandwidth_allocation() -> Tuple[List[dict], Dict[str, float]]:
+    from repro.core.hw.system import ElasticUseCase
+    uc = ElasticUseCase()
+    rows = [{"case": k, "improvement_pct": round(100 * v, 2)}
+            for k, v in uc.bandwidth_table().items()]
+    return rows, {"paper_1acc_pct": 5.24, "paper_3acc_pct": 6.0}
+
+
+# ----------------------------------------------------------------------
+# §V-E — communication overhead (time-to-grant / completion)
+# ----------------------------------------------------------------------
+def bench_latency() -> Tuple[List[dict], Dict[str, float]]:
+    from repro.core.hw.crossbar import (CrossbarSim, MasterRequest,
+                                        best_case_time_to_grant,
+                                        request_completion_cc,
+                                        worst_case_completion_cc,
+                                        worst_case_time_to_grant)
+    sim = CrossbarSim()
+    for m in (0, 1, 2):
+        sim.submit(MasterRequest(cycle=0, master=m, dst_onehot=0b1000,
+                                 n_words=8))
+    results = sim.run()
+    rows = [{
+        "best_ttg_cc": best_case_time_to_grant(),
+        "completion_8pkt_cc": request_completion_cc(8),
+        "worst_ttg_3masters_cc": max(r.time_to_grant for r in results),
+        "worst_completion_cc": max(r.completion_latency for r in results),
+    }]
+    return rows, {"paper_best_ttg": 4, "paper_completion": 13,
+                  "paper_worst_ttg": 28, "paper_worst_completion": 37}
+
+
+# ----------------------------------------------------------------------
+# Fig 6 — worst-case latency vs number of PR regions (linear)
+# ----------------------------------------------------------------------
+def bench_fig6_scaling() -> Tuple[List[dict], Dict[str, float]]:
+    from repro.core.hw.area import AreaModel
+    curve = AreaModel.worst_case_latency_curve(8)
+    rows = [{"n_masters": n, "worst_completion_cc": cc}
+            for n, cc in curve.items()]
+    diffs = np.diff([cc for cc in curve.values()])
+    return rows, {"linear_increment_cc": float(diffs[0]),
+                  "is_linear": bool((diffs == diffs[0]).all())}
+
+
+# ----------------------------------------------------------------------
+# Tables I & II — area / power
+# ----------------------------------------------------------------------
+def bench_area() -> Tuple[List[dict], Dict[str, float]]:
+    from repro.core.hw.area import TABLE_I, AreaModel
+    m = AreaModel()
+    rows = [{"component": k, "lut": v[0], "ff": v[1], "bram": v[2]}
+            for k, v in TABLE_I.items()]
+    claims = {
+        "lut_saving_vs_noc_pct": round(100 * m.lut_saving_vs_noc(), 1),
+        "ff_saving_vs_noc_pct": round(100 * m.ff_saving_vs_noc(), 1),
+        "power_ratio_vs_noc": m.power_ratio_vs_noc(),
+        "lut_overhead_vs_ewb_pct": round(100 * m.lut_overhead_vs_ewb(), 1),
+        "ff_saving_vs_ewb_pct": round(100 * m.ff_saving_vs_ewb(), 1),
+        "latency_saving_vs_noc_4router_pct":
+            round(100 * m.latency_saving_vs_noc(4), 1),
+        "paper": "61% LUT, 95% FF, 80x power, +48.6%/-46.4% vs E-WB, 69% cc",
+    }
+    return rows, claims
+
+
+# ----------------------------------------------------------------------
+# Kernel microbenchmarks (CPU wall time; interpret-mode — correctness
+# throughput, not TPU performance; TPU numbers come from the roofline).
+# ----------------------------------------------------------------------
+def _time_us(fn, *args, n=3, **kw) -> float:
+    fn(*args, **kw)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args, **kw)
+    try:
+        import jax
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+    return 1e6 * (time.perf_counter() - t0) / n
+
+
+def bench_kernels_cpu() -> Tuple[List[dict], Dict[str, str]]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.registers import CrossbarRegisters
+    from repro.core.arbiter import wrr_dispatch_plan
+    from repro.kernels.hamming.ops import hamming_encode
+    from repro.models.attention import attention_prefill
+
+    rows = []
+    ks = jax.random.split(jax.random.key(0), 4)
+
+    # crossbar plan (jnp production path)
+    dst = jax.random.randint(ks[0], (4096,), 0, 8)
+    src = jax.random.randint(ks[1], (4096,), 0, 8)
+    regs = CrossbarRegisters.create(8, capacity=1024)
+    f = jax.jit(lambda d, s: wrr_dispatch_plan(d, s, regs).counts)
+    rows.append({"name": "wrr_dispatch_plan_4096pkts",
+                 "us_per_call": round(_time_us(f, dst, src), 1)})
+
+    # hamming 16 KB use case
+    data = jnp.asarray(np.arange(4096, dtype=np.uint32))
+    rows.append({"name": "hamming_encode_16KB",
+                 "us_per_call": round(_time_us(hamming_encode, data), 1)})
+
+    # chunked attention 1k
+    q = jax.random.normal(ks[2], (1, 1024, 4, 64), jnp.float32)
+    kv = jax.random.normal(ks[3], (1, 1024, 2, 64), jnp.float32)
+    f2 = jax.jit(lambda q, k, v: attention_prefill(q, k, v, causal=True))
+    rows.append({"name": "attention_prefill_1k",
+                 "us_per_call": round(_time_us(f2, q, kv, kv), 1)})
+    return rows, {"note": "CPU wall time; TPU perf is §Roofline's job"}

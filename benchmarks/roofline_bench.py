@@ -1,0 +1,48 @@
+"""Roofline benchmark: aggregates the dry-run JSONs into the §Roofline table.
+
+Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+emits one row per (arch x shape x mesh) with the three roofline terms, the
+bottleneck, and the roofline fraction. This is the harness behind
+EXPERIMENTS.md §Roofline — run the dry-run first.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_rows(mesh: str = "pod") -> List[dict]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["reason"]})
+            continue
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": rec["t_compute"], "t_memory_s": rec["t_memory"],
+            "t_collective_s": rec["t_collective"],
+            "bottleneck": rec["bottleneck"],
+            "useful_flops_ratio": rec["useful_flops_ratio"],
+            "roofline_fraction": rec["roofline_fraction"],
+        })
+    return rows
+
+
+def bench_roofline() -> Tuple[List[dict], Dict[str, str]]:
+    rows = load_rows("pod")
+    live = [r for r in rows if "skipped" not in r]
+    claims = {"cells": len(rows), "live": len(live),
+              "note": "full table + per-cell analysis in EXPERIMENTS.md"}
+    if live:
+        worst = min(live, key=lambda r: r["roofline_fraction"] or 1)
+        best = max(live, key=lambda r: r["roofline_fraction"] or 0)
+        claims["worst"] = (f"{worst['arch']}/{worst['shape']} "
+                           f"{worst['roofline_fraction']:.3f}")
+        claims["best"] = (f"{best['arch']}/{best['shape']} "
+                          f"{best['roofline_fraction']:.3f}")
+    return rows, claims

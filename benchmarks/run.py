@@ -1,0 +1,61 @@
+"""Benchmark driver: one function per paper table/figure + the roofline
+aggregation. Prints a readable report and writes benchmarks/results.json.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig5 area  # subset
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
+                                     bench_fig5_elasticity,
+                                     bench_fig6_scaling, bench_kernels_cpu,
+                                     bench_latency)
+from benchmarks.roofline_bench import bench_roofline
+
+BENCHES = {
+    "fig5": ("Fig 5 — §V-C elasticity use case", bench_fig5_elasticity),
+    "bandwidth": ("§V-D — dynamic bandwidth allocation",
+                  bench_bandwidth_allocation),
+    "latency": ("§V-E — communication overhead", bench_latency),
+    "fig6": ("Fig 6 — worst-case latency scaling", bench_fig6_scaling),
+    "area": ("Tables I/II — area & power", bench_area),
+    "kernels": ("kernel microbenchmarks (CPU)", bench_kernels_cpu),
+    "roofline": ("§Roofline — dry-run aggregation", bench_roofline),
+}
+
+
+def main(argv=None) -> int:
+    names = (argv or sys.argv[1:]) or list(BENCHES)
+    results = {}
+    failures = []
+    for name in names:
+        title, fn = BENCHES[name]
+        print(f"\n=== {name}: {title} " + "=" * max(0, 50 - len(title)))
+        try:
+            rows, claims = fn()
+        except Exception as e:              # keep the report going
+            failures.append((name, repr(e)))
+            print(f"  FAILED: {e!r}")
+            continue
+        for row in rows[:50]:
+            print("  " + ",".join(f"{k}={v}" for k, v in row.items()))
+        if len(rows) > 50:
+            print(f"  ... ({len(rows)} rows total)")
+        print("  claims: " + json.dumps(claims))
+        results[name] = {"rows": rows, "claims": claims}
+
+    out = Path(__file__).resolve().parent / "results.json"
+    out.write_text(json.dumps(results, indent=1, default=str))
+    print(f"\nwrote {out}")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

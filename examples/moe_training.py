@@ -1,0 +1,64 @@
+"""End-to-end driver: train a ~100M-parameter MoE LM for a few hundred steps.
+
+The MoE layer routes tokens to experts through the paper's crossbar
+mechanism: the WRR package quota is the expert capacity, the isolation mask
+restricts which experts this tenant may use, and drop statistics surface the
+paper's error codes. Training runs the full production substrate — data
+pipeline (prefetching), AdamW + cosine schedule, async checkpointing,
+step watchdog — and asserts the loss actually falls.
+
+    PYTHONPATH=src python examples/moe_training.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.lm import build_model
+from repro.runtime.train import TrainLoop, TrainLoopConfig
+
+# ~100M-param MoE: 8 layers, d=512, 8 experts (top-2), d_ff=1408.
+MOE_100M = ModelConfig(
+    name="moe-100m", family="moe", n_layers=8, d_model=512,
+    n_heads=8, n_kv_heads=4, d_ff=1408, vocab=32000,
+    attn_window=1024, moe=MoEConfig(n_experts=8, top_k=2),
+    remat="nothing")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/elastix_moe_ckpt")
+    args = ap.parse_args()
+
+    model = build_model(MOE_100M)
+    print(f"model: {MOE_100M.name}  params={model.n_params()/1e6:.1f}M "
+          f"({MOE_100M.moe.n_experts} experts, top-{MOE_100M.moe.top_k})")
+
+    run = TrainLoopConfig(steps=args.steps, global_batch=args.batch,
+                          seq_len=args.seq, lr=6e-4, warmup=30,
+                          ckpt_every=100, log_every=10, seed=0)
+    t0 = time.time()
+    loop = TrainLoop(MOE_100M, run, ckpt_dir=Path(args.ckpt),
+                     on_log=lambda r: print(
+                         f"  step {r['step']:4d}  loss {r['loss']:.4f}  "
+                         f"({r['step_s']:.2f}s)"))
+    hist = loop.run_loop()
+    dt = time.time() - t0
+
+    first = hist[0]["loss"]
+    last = min(h["loss"] for h in hist[-3:])
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"\nloss {first:.4f} -> {last:.4f} over {args.steps} steps "
+          f"({dt:.0f}s, {tok_s:,.0f} tok/s on CPU)")
+    assert last < first - 0.3, "training did not converge"
+    print("checkpoints:", sorted(p.name for p in Path(args.ckpt).iterdir()))
+    print("watchdog events:", len(loop.watchdog.events))
+
+
+if __name__ == "__main__":
+    main()

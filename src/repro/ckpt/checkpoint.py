@@ -1,0 +1,200 @@
+"""Sharded, async, atomically-committed checkpointing with elastic restore.
+
+Layout (one directory per step)::
+
+    <root>/step_00000100.tmp/      while writing
+        manifest.json              tree structure + shapes/dtypes + metadata
+        arr_00000.npy ...          one file per leaf (host-local values)
+    <root>/step_00000100/          atomic rename on commit
+
+Design points for the 1000-node story:
+
+- **atomic commit**: the ``.tmp`` -> final rename is the commit marker; a
+  crashed writer leaves only a ``.tmp`` dir that restore ignores and the next
+  save garbage-collects. No torn checkpoints.
+- **async**: ``save_async`` snapshots leaves to host memory (device_get) on
+  the caller's thread — the step loop resumes immediately — and a background
+  thread does the serialisation/fsync. ``wait()`` joins before the next save
+  (single outstanding save, bounded host memory).
+- **elastic restore**: leaves are re-placed with ``jax.device_put`` against
+  the *current* mesh sharding, which may differ from the saving mesh — this
+  is the ERM's region-reprogram path (grow/shrink = restore under a new
+  placement; the ICAP analogue).
+- **retention**: keep the newest ``keep`` committed steps.
+
+On a real fleet each host writes only its addressable shards; on this
+single-host container the full value is written. The manifest records the
+logical (global) shape either way, so restore is placement-agnostic.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including ml_dtypes (bfloat16, float8_*)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _tree_paths(tree: Any) -> List[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+def save_checkpoint(root: Path, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> Path:
+    """Synchronous save with atomic commit. Returns the committed dir."""
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "extra": extra or {},
+        "paths": _tree_paths(tree),
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=1))
+
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                     # the commit point
+    return final
+
+
+def latest_step(root: Path) -> Optional[int]:
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = []
+    for d in root.iterdir():
+        if d.is_dir() and d.name.startswith("step_") \
+                and not d.name.endswith(".tmp") \
+                and (d / _MANIFEST).exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(root: Path, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; re-shard to ``shardings``.
+
+    ``shardings``: optional pytree (same structure) of ``jax.sharding``
+    placements for the *current* mesh — the elastic-resize path.
+    """
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(like_leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, expected "
+            f"{len(like_leaves)} — architecture mismatch")
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(like_leaves))
+
+    out = []
+    for meta, like_leaf, shd in zip(manifest["leaves"], like_leaves,
+                                    shard_leaves):
+        arr = np.load(d / meta["file"])
+        if arr.dtype.kind == "V":       # ml_dtypes (bf16/f8) round-trip as
+            arr = arr.view(_np_dtype(meta["dtype"]))        # raw void bytes
+        want_shape = tuple(getattr(like_leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"shape mismatch {arr.shape} != {want_shape} "
+                             f"for {meta['file']}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            leaf = jax.device_put(arr)
+            want_dtype = getattr(like_leaf, "dtype", None)
+            if want_dtype is not None and leaf.dtype != want_dtype:
+                leaf = leaf.astype(want_dtype)      # cast on device: numpy
+            out.append(leaf)                        # lacks ml_dtypes casts
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _gc(root: Path, keep: int) -> None:
+    root = Path(root)
+    steps = sorted(
+        int(d.name.split("_")[1]) for d in root.iterdir()
+        if d.is_dir() and d.name.startswith("step_")
+        and not d.name.endswith(".tmp") and (d / _MANIFEST).exists())
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(root / f"step_{s:08d}", ignore_errors=True)
+    for d in root.iterdir():              # orphaned tmp dirs from crashes
+        if d.name.endswith(".tmp"):
+            shutil.rmtree(d, ignore_errors=True)
+
+
+class CheckpointManager:
+    """Async save + retention + restore-latest, one outstanding save."""
+
+    def __init__(self, root: Path, keep: int = 3):
+        self.root = Path(root)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[dict] = None) -> None:
+        self.wait()
+        # Snapshot to host memory NOW (cheap on CPU, device DMA on TPU) so
+        # the step loop can donate/overwrite device buffers immediately.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _run():
+            try:
+                save_checkpoint(self.root, step, host_tree, extra)
+                _gc(self.root, self.keep)
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[tuple[int, Any]]:
+        step = latest_step(self.root)
+        if step is None:
+            return None
+        return step, restore_checkpoint(self.root, like, step, shardings)

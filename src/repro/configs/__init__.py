@@ -1,0 +1,3 @@
+from repro.configs.base import ARCH_IDS, all_configs, get_config, resolve
+
+__all__ = ["ARCH_IDS", "all_configs", "get_config", "resolve"]

@@ -1,0 +1,27 @@
+"""The paper's primary contribution, as a composable JAX feature set.
+
+- ``repro.core.hw``        — cycle-level faithful simulator of the published
+                             FPGA design (baseline reproduction).
+- ``repro.core.registers`` — distributed register file (Table III semantics).
+- ``repro.core.arbiter``   — vectorised, grant-order-preserving WRR dispatch.
+- ``repro.core.crossbar``  — local + sharded (all_to_all) crossbar exchange.
+- ``repro.core.module``    — the §IV-H computation-module template.
+- ``repro.core.elastic``   — the Elastic Resource Manager control plane.
+"""
+from repro.core.registers import CrossbarRegisters, ErrorCode, validate_registers
+from repro.core.arbiter import DispatchPlan, wrr_dispatch_plan, dispatch, combine
+from repro.core.crossbar import (
+    CrossbarInterconnect, exchange_local, combine_local,
+    exchange_sharded, combine_sharded, pairwise_dispatch_plan,
+)
+from repro.core.module import ComputationModule, ModuleChain, ModuleFootprint, module_from_layer
+from repro.core.elastic import ElasticResourceManager, Region, ON_SERVER
+
+__all__ = [
+    "CrossbarRegisters", "ErrorCode", "validate_registers",
+    "DispatchPlan", "wrr_dispatch_plan", "dispatch", "combine",
+    "CrossbarInterconnect", "exchange_local", "combine_local",
+    "exchange_sharded", "combine_sharded", "pairwise_dispatch_plan",
+    "ComputationModule", "ModuleChain", "ModuleFootprint", "module_from_layer",
+    "ElasticResourceManager", "Region", "ON_SERVER",
+]

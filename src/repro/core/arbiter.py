@@ -1,0 +1,131 @@
+"""Vectorised WRR arbitration — grant-order-preserving, data-parallel.
+
+The hardware arbiter (``repro.core.hw.arbiter``) grants one master at a time,
+rotating when a package quota is exhausted. A per-cycle loop is hostile to a
+systolic machine, so the TPU path re-expresses the *same grant order* as a
+one-shot rank computation over a batch of packets:
+
+- **isolation** — packet valid iff ``allowed[src, dst]`` and neither port is
+  held in reset (the one-hot-AND of §IV-E.2);
+- **quota** — packet rank within its (src, dst) stream must be below the
+  register-file quota for that pair (bandwidth allocation in packages);
+- **WRR order** — granted packets for a destination are served round-robin at
+  package granularity: slot order sorts by (intra-stream rank, src), which is
+  exactly the order the rotating-priority hardware arbiter produces for
+  single-package sessions;
+- **capacity** — a destination accepts ``capacity[dst]`` packets (slave
+  register depth; on TPU, the expert/stage buffer size). Overflow packets get
+  the ACK_TIMEOUT error, quota-deferred packets GRANT_TIMEOUT, isolation
+  violations INVALID_DEST — the paper's error codes, per packet.
+
+Everything below is pure ``jnp`` and jit/vmap/shard_map-safe; it is also the
+oracle for the ``crossbar_dispatch`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registers import CrossbarRegisters, ErrorCode
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Per-packet grant decisions for one dispatch round."""
+
+    keep: jax.Array        # [T] bool — packet granted a slot
+    slot: jax.Array        # [T] int32 — destination-local slot (valid iff keep)
+    dst: jax.Array         # [T] int32 — destination port
+    error: jax.Array       # [T] int32 — ErrorCode per packet
+    counts: jax.Array      # [S] int32 — granted packets per destination
+    drops: jax.Array       # [4] int32 — histogram over error codes
+
+
+def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
+                      regs: CrossbarRegisters) -> DispatchPlan:
+    """Compute grants/slots for packets ``t`` with ``src[t] -> dst[t]``.
+
+    Shapes: ``dst``, ``src`` are [T] int32 with values in [0, n_ports).
+    """
+    n = regs.n_ports
+    T = dst.shape[0]
+    dst = dst.astype(jnp.int32)
+    src = src.astype(jnp.int32)
+
+    # --- isolation (one-hot AND) + reset gating -------------------------
+    iso_ok = regs.allowed[src, dst] & ~regs.reset[src] & ~regs.reset[dst]
+
+    # --- per-(src,dst) stream rank --------------------------------------
+    pair = src * n + dst                                    # [T]
+    pair_oh = jax.nn.one_hot(pair, n * n, dtype=jnp.int32)  # [T, n*n]
+    pair_oh = pair_oh * iso_ok[:, None].astype(jnp.int32)
+    rank_sd = (jnp.cumsum(pair_oh, axis=0) - pair_oh)       # exclusive cumsum
+    rank_sd = jnp.take_along_axis(rank_sd, pair[:, None], axis=1)[:, 0]
+
+    quota = regs.quota[dst, src]
+    quota_ok = (quota == 0) | (rank_sd < quota)
+
+    granted_pre = iso_ok & quota_ok
+
+    # --- WRR slot order: (round=rank_sd, src) round-robin per destination
+    # Composite sort key; smaller key = earlier grant. Ungranted packets get
+    # +inf-like keys so they never displace granted ones.
+    big = jnp.int32(T + 1)
+    key = rank_sd * n + src                                 # round-major WRR
+    sort_key = jnp.where(granted_pre, key, big * n)
+    # Destination-local rank of each granted packet under the WRR order:
+    # count of packets with the same dst and strictly smaller (key, t).
+    dst_oh = jax.nn.one_hot(dst, n, dtype=jnp.int32)        # [T, n]
+    order = jnp.argsort(sort_key * jnp.int32(T) + jnp.arange(T, dtype=jnp.int32))
+    # scatter: position in sorted order, restricted per destination.
+    sorted_dst_oh = dst_oh[order] * granted_pre[order, None].astype(jnp.int32)
+    slots_sorted = jnp.cumsum(sorted_dst_oh, axis=0) - sorted_dst_oh
+    slot_of_sorted = jnp.take_along_axis(
+        slots_sorted, dst[order][:, None], axis=1)[:, 0]
+    slot = jnp.zeros((T,), jnp.int32).at[order].set(slot_of_sorted)
+
+    cap_ok = slot < regs.capacity[dst]
+    keep = granted_pre & cap_ok
+
+    error = jnp.where(~iso_ok, jnp.int32(ErrorCode.INVALID_DEST),
+             jnp.where(~quota_ok, jnp.int32(ErrorCode.GRANT_TIMEOUT),
+              jnp.where(~cap_ok, jnp.int32(ErrorCode.ACK_TIMEOUT),
+                        jnp.int32(ErrorCode.OK))))
+
+    counts = jnp.sum(dst_oh * keep[:, None].astype(jnp.int32), axis=0)
+    drops = jnp.zeros((4,), jnp.int32).at[error].add(1)
+    return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0), dst=dst,
+                        error=error, counts=counts, drops=drops)
+
+
+def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
+             capacity: int) -> jax.Array:
+    """Scatter packets [T, D] into destination slabs [n_ports, capacity, D].
+
+    Dense one-hot formulation (MXU-friendly); the Pallas kernel replaces this
+    with a blockwise scatter when T is large.
+    """
+    T, D = x.shape
+    dst_oh = jax.nn.one_hot(plan.dst, n_ports, dtype=x.dtype)
+    slot_oh = jax.nn.one_hot(plan.slot, capacity, dtype=x.dtype)
+    comb = dst_oh[:, :, None] * slot_oh[:, None, :]          # [T, S, C]
+    comb = comb * plan.keep[:, None, None].astype(x.dtype)
+    return jnp.einsum("tsc,td->scd", comb, x)
+
+
+def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:
+    """Gather destination slabs [S, C, D] back to packets [T, D], weighted.
+
+    Packets that were dropped receive zeros (the module sees its error code in
+    the register file — the residual stream carries them unchanged upstream).
+    """
+    S, C, D = y.shape
+    dst_oh = jax.nn.one_hot(plan.dst, S, dtype=y.dtype)
+    slot_oh = jax.nn.one_hot(plan.slot, C, dtype=y.dtype)
+    comb = dst_oh[:, :, None] * slot_oh[:, None, :]          # [T, S, C]
+    comb = comb * (plan.keep.astype(y.dtype) * weights)[:, None, None]
+    return jnp.einsum("tsc,scd->td", comb, y)

@@ -1,0 +1,239 @@
+"""FPGA Elastic Resource Manager (§IV-A), re-expressed for a TPU fleet.
+
+The control plane that makes the system *elastic*:
+
+- keeps track of regions that are available and which are allocated to which
+  application;
+- analyses a request in terms of required regions, allocates what is free and
+  leaves the remainder **on-server** (host-executed modules);
+- when a region frees up (another tenant shrinks/releases, or a failed region
+  heals), *promotes* an on-server module onto it, reprograms the region
+  (checkpoint-restore + recompile — the ICAP analogue) and re-points the
+  other modules' destination addresses via the register file;
+- on a region failure, demotes its module to on-server and re-points
+  destinations — the same mechanism run in reverse, which is what makes the
+  elasticity story double as the fault-tolerance story.
+
+All decisions are pure host-side bookkeeping; the data plane sees only new
+register-file values (and, on placement changes, a weight restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.module import ModuleFootprint
+from repro.core.registers import CrossbarRegisters
+
+# Reconfiguration cost model (the ICAP analogue): restoring a module's weights
+# onto a region streams bytes at HBM bandwidth + a recompile/dispatch cost.
+HBM_BYTES_PER_S = 819e9
+RECONFIG_FIXED_S = 0.5          # program dispatch + cache-hit compile
+
+
+ON_SERVER = -1                   # placement value for host-executed modules
+
+
+@dataclasses.dataclass
+class Region:
+    """A fixed-size slice of the mesh — the PR-region analogue."""
+
+    rid: int
+    n_chips: int
+    hbm_bytes: int
+    healthy: bool = True
+    tenant: Optional[str] = None
+    module_idx: Optional[int] = None     # which of the tenant's modules
+
+    @property
+    def free(self) -> bool:
+        return self.healthy and self.tenant is None
+
+
+@dataclasses.dataclass
+class TenantState:
+    name: str
+    footprints: List[ModuleFootprint]
+    placement: List[int] = dataclasses.field(default_factory=list)  # region id / ON_SERVER
+    app_id: int = 0
+    max_regions: Optional[int] = None       # elasticity cap set by shrink/grow
+
+    @property
+    def on_server_modules(self) -> List[int]:
+        return [i for i, p in enumerate(self.placement) if p == ON_SERVER]
+
+    @property
+    def placed_count(self) -> int:
+        return sum(1 for p in self.placement if p != ON_SERVER)
+
+    def may_grow(self) -> bool:
+        return self.max_regions is None or self.placed_count < self.max_regions
+
+
+@dataclasses.dataclass
+class ReconfigEvent:
+    kind: str              # "allocate" | "promote" | "demote" | "release" | "fail"
+    tenant: str
+    module_idx: Optional[int]
+    region: Optional[int]
+    cost_s: float
+    wall_time: float
+
+
+class ElasticResourceManager:
+    """Region pool + tenant bookkeeping + register-file synthesis."""
+
+    def __init__(self, regions: Sequence[Region], host_port: int = 0):
+        self.regions: Dict[int, Region] = {r.rid: r for r in regions}
+        self.tenants: Dict[str, TenantState] = {}
+        self.host_port = host_port          # crossbar port of the AXI/host bridge
+        self.events: List[ReconfigEvent] = []
+        self._clock = 0.0
+
+    # ------------------------------------------------------------------
+    def _tick(self, dt: float) -> float:
+        self._clock += dt
+        return self._clock
+
+    def _log(self, kind: str, tenant: str, module_idx: Optional[int],
+             region: Optional[int], cost_s: float) -> None:
+        self.events.append(ReconfigEvent(kind, tenant, module_idx, region,
+                                         cost_s, self._tick(cost_s)))
+
+    def reconfig_cost_s(self, fp: ModuleFootprint) -> float:
+        return RECONFIG_FIXED_S + fp.param_bytes / HBM_BYTES_PER_S
+
+    def free_regions(self) -> List[Region]:
+        return [r for r in self.regions.values() if r.free]
+
+    # ------------------------------------------------------------------
+    def submit(self, name: str, footprints: Sequence[ModuleFootprint],
+               app_id: int = 0) -> List[int]:
+        """Admit a tenant; place as many modules as regions allow, rest
+        on-server. Returns the placement list."""
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already admitted")
+        st = TenantState(name=name, footprints=list(footprints), app_id=app_id)
+        for i, fp in enumerate(st.footprints):
+            region = next((r for r in self.free_regions()
+                           if fp.fits(r.hbm_bytes)), None)
+            if region is None:
+                st.placement.append(ON_SERVER)
+                self._log("demote", name, i, None, 0.0)
+            else:
+                region.tenant, region.module_idx = name, i
+                st.placement.append(region.rid)
+                self._log("allocate", name, i, region.rid,
+                          self.reconfig_cost_s(fp))
+        self.tenants[name] = st
+        return list(st.placement)
+
+    def release(self, name: str) -> None:
+        """Tenant done: free its regions and promote waiters (§IV-A)."""
+        st = self.tenants.pop(name)
+        for p in st.placement:
+            if p != ON_SERVER:
+                r = self.regions[p]
+                r.tenant = r.module_idx = None
+        self._log("release", name, None, None, 0.0)
+        self._promote_waiters()
+
+    def shrink(self, name: str, n_regions: int) -> List[int]:
+        """Reduce a tenant to ``n_regions`` regions (demote the tail modules)."""
+        st = self.tenants[name]
+        st.max_regions = n_regions
+        placed = [i for i, p in enumerate(st.placement) if p != ON_SERVER]
+        for i in placed[n_regions:]:
+            r = self.regions[st.placement[i]]
+            r.tenant = r.module_idx = None
+            st.placement[i] = ON_SERVER
+            self._log("demote", name, i, r.rid, 0.0)
+        self._promote_waiters()
+        return list(st.placement)
+
+    def grow(self, name: str, n_regions: Optional[int] = None) -> List[int]:
+        """Raise (or remove) a tenant's region cap and promote waiters."""
+        self.tenants[name].max_regions = n_regions
+        self._promote_waiters()
+        return list(self.tenants[name].placement)
+
+    def fail_region(self, rid: int) -> None:
+        """Heartbeat lost: demote the hosted module, mark region unhealthy."""
+        r = self.regions[rid]
+        r.healthy = False
+        if r.tenant is not None:
+            st = self.tenants[r.tenant]
+            st.placement[r.module_idx] = ON_SERVER
+            self._log("fail", r.tenant, r.module_idx, rid, 0.0)
+            r.tenant = r.module_idx = None
+            # A failed tenant module may relocate to another free region now.
+            self._promote_waiters()
+
+    def heal_region(self, rid: int) -> None:
+        self.regions[rid].healthy = True
+        self._promote_waiters()
+
+    def _promote_waiters(self) -> None:
+        """§IV-A: "the FPGA manager checks again if there are any PR regions
+        released so that it can run the on-server module on the FPGA"."""
+        for name in sorted(self.tenants):       # deterministic FIFO-ish order
+            st = self.tenants[name]
+            for i in st.on_server_modules:
+                if not st.may_grow():
+                    break
+                fp = st.footprints[i]
+                region = next((r for r in self.free_regions()
+                               if fp.fits(r.hbm_bytes)), None)
+                if region is None:
+                    continue
+                region.tenant, region.module_idx = name, i
+                st.placement[i] = region.rid
+                self._log("promote", name, i, region.rid,
+                          self.reconfig_cost_s(fp))
+
+    # ------------------------------------------------------------------
+    def build_registers(self, capacity: int = 8) -> CrossbarRegisters:
+        """Synthesise the crossbar register file for the current placement.
+
+        Ports: 0 = host bridge, 1..N = regions. Isolation: a region may talk
+        only to the host port and to regions of the *same tenant* (§IV-E.2).
+        Destinations: module i points at the region of module i+1, or at the
+        host port if the next module is on-server / the chain ends ("the last
+        module's destination address is sent back to the server").
+        """
+        import jax.numpy as jnp
+        n_ports = len(self.regions) + 1
+        regs = CrossbarRegisters.create(n_ports, n_modules=n_ports,
+                                        capacity=capacity)
+        allowed = jnp.zeros((n_ports, n_ports), dtype=bool)
+        allowed = allowed.at[self.host_port, :].set(True)   # host reaches all
+        allowed = allowed.at[:, self.host_port].set(True)   # all reach host
+        dest = jnp.full((n_ports,), self.host_port, dtype=jnp.int32)
+        for st in self.tenants.values():
+            ports = {i: (self.host_port if p == ON_SERVER else p + 1)
+                     for i, p in enumerate(st.placement)}
+            tenant_ports = [p for p in ports.values() if p != self.host_port]
+            for a in tenant_ports:
+                for b in tenant_ports:
+                    allowed = allowed.at[a, b].set(True)
+            for i, port in ports.items():
+                nxt = ports.get(i + 1, self.host_port)
+                if port != self.host_port:
+                    dest = dest.at[port].set(nxt)
+        regs = regs.write(allowed=allowed, dest=dest)
+        # Reset bits for unhealthy regions: no grants during reconfiguration.
+        reset = jnp.zeros((n_ports,), dtype=bool)
+        for r in self.regions.values():
+            if not r.healthy:
+                reset = reset.at[r.rid + 1].set(True)
+        return regs.write(reset=reset)
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> float:
+        live = [r for r in self.regions.values() if r.healthy]
+        used = [r for r in live if r.tenant is not None]
+        return len(used) / max(1, len(live))
+
+    def placement_of(self, name: str) -> List[int]:
+        return list(self.tenants[name].placement)

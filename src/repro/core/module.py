@@ -1,0 +1,103 @@
+"""Computation-module template (§IV-H) — the unit of elasticity.
+
+"We provide a standard template for the computation modules to have the same
+interfaces." A module is a self-contained compute stage with a uniform
+contract so the Elastic Resource Manager can place it on any region (or on
+the host) and the crossbar can route between modules without bespoke glue.
+
+On TPU a module is a pure function + parameter pytree + resource footprint.
+The footprint (param bytes, FLOPs/token, activation bytes/token) is what the
+ERM uses to decide placement — the analogue of a partial bitstream's resource
+requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleFootprint:
+    """Resource requirement of one module (the ERM's placement currency)."""
+
+    param_bytes: int
+    flops_per_token: float
+    activation_bytes_per_token: int
+
+    def fits(self, region_hbm_bytes: int, reserve_fraction: float = 0.2) -> bool:
+        return self.param_bytes <= region_hbm_bytes * (1 - reserve_fraction)
+
+
+@dataclasses.dataclass
+class ComputationModule:
+    """§IV-H template: input regs -> compute units -> output regs + status.
+
+    ``apply(params, x)`` must be pure and shape-preserving on the leading
+    token axis; ``init`` builds params from an rng. ``error_status`` mirrors
+    the template's error register: the runtime stores the last exception /
+    drop count here and forwards it to the register file.
+    """
+
+    name: str
+    init: Callable[[jax.Array], Any]
+    apply: Callable[[Any, jax.Array], jax.Array]
+    footprint: ModuleFootprint
+    error_status: int = 0
+
+    def __call__(self, params: Any, x: jax.Array) -> jax.Array:
+        return self.apply(params, x)
+
+
+@dataclasses.dataclass
+class ModuleChain:
+    """An application's acceleration requirement, expressed as small modules
+    (Fig 2). The chain is the decomposition the paper assumes as input —
+    "techniques to decompose ... are outside the scope of this paper"; here a
+    chain is just an ordered module list with crossbar hops between stages.
+    """
+
+    modules: List[ComputationModule]
+
+    def init(self, rng: jax.Array) -> List[Any]:
+        keys = jax.random.split(rng, len(self.modules))
+        return [m.init(k) for m, k in zip(self.modules, keys)]
+
+    def apply(self, params: Sequence[Any], x: jax.Array,
+              placement: Optional[Sequence[int]] = None) -> jax.Array:
+        """Run the chain. ``placement[i] == -1`` means "on-server": the module
+        runs on host (CPU) via ``jax.device_put`` round-trip — the paper's
+        fallback when no PR region is free."""
+        for i, (m, p) in enumerate(zip(self.modules, params)):
+            on_server = placement is not None and placement[i] < 0
+            if on_server:
+                cpu = jax.devices("cpu")[0]
+                x_host = jax.device_put(x, cpu)
+                p_host = jax.tree.map(lambda a: jax.device_put(a, cpu), p)
+                x = jax.device_put(m.apply(p_host, x_host), x.devices().pop())
+            else:
+                x = m.apply(p, x)
+        return x
+
+    @property
+    def total_footprint(self) -> ModuleFootprint:
+        return ModuleFootprint(
+            param_bytes=sum(m.footprint.param_bytes for m in self.modules),
+            flops_per_token=sum(m.footprint.flops_per_token for m in self.modules),
+            activation_bytes_per_token=max(
+                (m.footprint.activation_bytes_per_token for m in self.modules),
+                default=0))
+
+
+def module_from_layer(name: str, init_fn, apply_fn, *, d_model: int,
+                      param_count: int, flops_per_token: float,
+                      dtype_bytes: int = 2) -> ComputationModule:
+    """Wrap a model layer as a crossbar-routable computation module."""
+    return ComputationModule(
+        name=name, init=init_fn, apply=apply_fn,
+        footprint=ModuleFootprint(
+            param_bytes=param_count * dtype_bytes,
+            flops_per_token=flops_per_token,
+            activation_bytes_per_token=d_model * dtype_bytes))

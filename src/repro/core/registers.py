@@ -1,0 +1,102 @@
+"""Distributed register file — the TPU re-expression of Table III.
+
+On the FPGA, the register file is the *cheap reconfiguration surface*: the
+Elastic Resource Manager rewrites destinations / isolation masks / package
+quotas without touching tenant logic. On the TPU fleet the same surface is a
+small, mesh-replicated pytree consumed by the crossbar dispatch: rewriting it
+re-routes module traffic, re-allocates bandwidth (capacity) and re-scopes
+isolation *without recompiling tenant programs* (shapes are static; only
+values change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ErrorCode:
+    """Transaction error codes, identical to the hardware enum."""
+    OK = 0
+    INVALID_DEST = 1     # isolation violation (allowed-mask AND == 0)
+    GRANT_TIMEOUT = 2    # no slot within the arbitration window (dropped)
+    ACK_TIMEOUT = 3      # destination over capacity (stalled & dropped)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CrossbarRegisters:
+    """Mesh-replicated configuration consumed by the crossbar dispatch.
+
+    Semantics mirror Table III:
+
+    - ``dest``      [n_modules]            module -> destination port (PR*_DEST)
+    - ``allowed``   [n_ports, n_ports]     one-hot-AND isolation masks
+                                           (ALLOWED_PORT<m>), allowed[src, dst]
+    - ``quota``     [n_ports, n_ports]     WRR package quotas, quota[dst, src]
+                                           (PKGS_PORT<dst> packed fields);
+                                           0 == unlimited
+    - ``capacity``  [n_ports]              receive-slot count per destination
+                                           (slave register depth, scaled to
+                                           tokens on TPU)
+    - ``reset``     [n_ports]              ports held in reset make/receive no
+                                           grants during reconfiguration (§IV-C)
+    - ``error``     [n_ports]              last-transaction error status
+    - ``version``   []                     bumped on every ERM rewrite
+    """
+
+    dest: jax.Array
+    allowed: jax.Array
+    quota: jax.Array
+    capacity: jax.Array
+    reset: jax.Array
+    error: jax.Array
+    version: jax.Array
+
+    @property
+    def n_ports(self) -> int:
+        return self.allowed.shape[0]
+
+    @staticmethod
+    def create(n_ports: int, *, n_modules: int | None = None,
+               capacity: int = 8) -> "CrossbarRegisters":
+        n_modules = n_ports if n_modules is None else n_modules
+        return CrossbarRegisters(
+            dest=jnp.arange(n_modules, dtype=jnp.int32) % n_ports,
+            allowed=jnp.ones((n_ports, n_ports), dtype=bool),
+            quota=jnp.zeros((n_ports, n_ports), dtype=jnp.int32),
+            capacity=jnp.full((n_ports,), capacity, dtype=jnp.int32),
+            reset=jnp.zeros((n_ports,), dtype=bool),
+            error=jnp.zeros((n_ports,), dtype=jnp.int32),
+            version=jnp.zeros((), dtype=jnp.int32),
+        )
+
+    # The ERM's write port: functional updates that bump the version counter.
+    def write(self, **updates) -> "CrossbarRegisters":
+        new = dataclasses.replace(self, **updates)
+        return dataclasses.replace(new, version=self.version + 1)
+
+    def with_isolation(self, src: int, allowed_dsts) -> "CrossbarRegisters":
+        mask = self.allowed.at[src].set(
+            jnp.zeros((self.n_ports,), bool).at[jnp.asarray(allowed_dsts)].set(True))
+        return self.write(allowed=mask)
+
+    def with_quota(self, dst: int, src: int, packages: int) -> "CrossbarRegisters":
+        return self.write(quota=self.quota.at[dst, src].set(packages))
+
+    def with_dest(self, module: int, dst: int) -> "CrossbarRegisters":
+        return self.write(dest=self.dest.at[module].set(dst))
+
+
+def validate_registers(regs: CrossbarRegisters) -> None:
+    """Host-side invariant checks (used by tests and the ERM)."""
+    n = regs.n_ports
+    assert regs.allowed.shape == (n, n)
+    assert regs.quota.shape == (n, n)
+    assert bool((np.asarray(regs.quota) >= 0).all()), "quotas are non-negative"
+    assert bool((np.asarray(regs.capacity) >= 0).all())
+    assert bool((np.asarray(regs.dest) >= 0).all())
+    assert bool((np.asarray(regs.dest) < n).all()), "destinations must be ports"

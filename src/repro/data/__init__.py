@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataPipeline, PipelineState,  # noqa: F401
+                                 synthetic_batch)

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel package ships three files:
+
+- ``kernel.py`` — the ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+  (TPU is the target; ``interpret=True`` validates the body on CPU);
+- ``ops.py``    — the jit'd public wrapper (padding, layout, backend choice);
+- ``ref.py``    — the pure-jnp/numpy oracle the tests sweep against.
+
+Kernels:
+
+- ``crossbar_dispatch`` — the paper's §IV-E quota-arbitrated, isolation-
+  checked packet dispatch (plan / scatter / combine), scatter as MXU matmul;
+- ``flash_attention``   — causal/SWA GQA attention, online softmax;
+- ``ssd``               — Mamba-2 state-space-duality chunk scan;
+- ``rglru``             — RG-LRU linear recurrence (Hillis–Steele in VMEM);
+- ``hamming``           — the paper's Hamming(31,26) + multiplier modules,
+  bit-parallel over VPU lanes.
+"""
+from repro.kernels.crossbar_dispatch import (crossbar_combine,  # noqa: F401
+                                             crossbar_dispatch, crossbar_plan)
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.hamming import (hamming_decode, hamming_encode,  # noqa: F401
+                                   multiply_const)
+from repro.kernels.rglru import rglru_scan_kernel  # noqa: F401
+from repro.kernels.ssd import ssd_scan  # noqa: F401

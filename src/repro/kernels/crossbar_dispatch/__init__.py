@@ -1,0 +1,2 @@
+from repro.kernels.crossbar_dispatch.ops import (  # noqa: F401
+    crossbar_combine, crossbar_dispatch, crossbar_plan)

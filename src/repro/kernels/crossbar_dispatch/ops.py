@@ -1,0 +1,82 @@
+"""Public entry points for the crossbar-dispatch kernels.
+
+Handles token padding (to the block size) and backend selection
+(interpret=True off-TPU). Padding tokens are tagged dst = -1, which the plan
+kernel drops via the isolation check — identical to the paper's invalid-
+destination path, so padding needs no special-casing downstream.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_dispatch import kernel as _k
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_tokens(arr: jax.Array, block_t: int, fill) -> Tuple[jax.Array, int]:
+    T = arr.shape[0]
+    pad = (-T) % block_t
+    if pad:
+        pad_width = ((0, pad),) + ((0, 0),) * (arr.ndim - 1)
+        arr = jnp.pad(arr, pad_width, constant_values=fill)
+    return arr, T
+
+
+def crossbar_plan(dst: jax.Array, allowed_row: jax.Array,
+                  quota_row: jax.Array, capacity: jax.Array, *,
+                  block_t: int = 256, interpret: bool | None = None):
+    """Grant decisions for one source region's packets.
+
+    dst [T] int32; register rows [S]. Returns (keep, slot, err, counts).
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    n_ports = allowed_row.shape[0]
+    block_t = min(block_t, max(8, dst.shape[0]))
+    dstp, T = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
+    keep, slot, err, counts = _k.plan_call(
+        dstp, allowed_row.astype(jnp.int32), quota_row.astype(jnp.int32),
+        capacity.astype(jnp.int32), n_ports=n_ports, block_t=block_t,
+        interpret=interpret)
+    return keep[:T], slot[:T], err[:T], counts
+
+
+def crossbar_dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
+                      slot: jax.Array, *, n_ports: int, capacity: int,
+                      block_t: int = 256,
+                      interpret: bool | None = None) -> jax.Array:
+    """Pack granted packets [T, D] into slabs [n_ports, capacity, D]."""
+    if interpret is None:
+        interpret = _should_interpret()
+    block_t = min(block_t, max(8, x.shape[0]))
+    xp, _ = _pad_tokens(x, block_t, 0)
+    dstp, _ = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
+    keepp, _ = _pad_tokens(keep.astype(jnp.int32), block_t, 0)
+    slotp, _ = _pad_tokens(slot.astype(jnp.int32), block_t, 0)
+    return _k.scatter_call(xp, dstp, keepp, slotp, n_ports=n_ports,
+                           capacity=capacity, block_t=block_t,
+                           interpret=interpret)
+
+
+def crossbar_combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
+                     slot: jax.Array, weights: jax.Array, *,
+                     block_t: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """Gather slabs [S, C, D] back to packets [T, D], weighted."""
+    if interpret is None:
+        interpret = _should_interpret()
+    T = dst.shape[0]
+    block_t = min(block_t, max(8, T))
+    dstp, _ = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
+    keepp, _ = _pad_tokens(keep.astype(jnp.int32), block_t, 0)
+    slotp, _ = _pad_tokens(slot.astype(jnp.int32), block_t, 0)
+    wp, _ = _pad_tokens(weights.astype(jnp.float32), block_t, 0)
+    out = _k.combine_call(y, dstp, keepp, slotp, wp, block_t=block_t,
+                          interpret=interpret)
+    return out[:T]

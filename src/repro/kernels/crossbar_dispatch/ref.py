@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the crossbar-dispatch kernels.
+
+Semantics are the single-source ``pairwise_dispatch_plan`` of
+``repro.core.crossbar`` (the per-region dispatch the kernel accelerates):
+rank counts isolation-passing packets per destination stream; quota == 0
+means unlimited; capacity bounds the slab; error codes follow the paper.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registers import ErrorCode
+
+
+def plan_ref(dst: jax.Array, allowed_row: jax.Array, quota_row: jax.Array,
+             capacity: jax.Array, n_ports: int
+             ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    dst = dst.astype(jnp.int32)
+    in_range = (dst >= 0) & (dst < n_ports)
+    dstc = jnp.clip(dst, 0, n_ports - 1)
+    iso_ok = in_range & (allowed_row[dstc] > 0)
+    dst_oh = jax.nn.one_hot(dstc, n_ports, dtype=jnp.int32) \
+        * iso_ok[:, None].astype(jnp.int32)
+    rank = jnp.cumsum(dst_oh, axis=0) - dst_oh
+    rank = jnp.take_along_axis(rank, dstc[:, None], axis=1)[:, 0]
+    quota = quota_row[dstc]
+    cap = capacity[dstc]
+    quota_ok = (quota == 0) | (rank < quota)
+    cap_ok = rank < cap
+    keep = iso_ok & quota_ok & cap_ok
+    err = jnp.where(~iso_ok, jnp.int32(ErrorCode.INVALID_DEST),
+           jnp.where(~quota_ok, jnp.int32(ErrorCode.GRANT_TIMEOUT),
+            jnp.where(~cap_ok, jnp.int32(ErrorCode.ACK_TIMEOUT),
+                      jnp.int32(ErrorCode.OK))))
+    counts = jnp.sum(jax.nn.one_hot(dstc, n_ports, dtype=jnp.int32)
+                     * keep[:, None].astype(jnp.int32), axis=0)
+    return (keep.astype(jnp.int32), jnp.where(keep, rank, 0), err, counts)
+
+
+def scatter_ref(x: jax.Array, dst: jax.Array, keep: jax.Array,
+                slot: jax.Array, n_ports: int, capacity: int) -> jax.Array:
+    T, D = x.shape
+    dstc = jnp.clip(dst.astype(jnp.int32), 0, n_ports - 1)
+    dst_oh = jax.nn.one_hot(dstc, n_ports, dtype=x.dtype)
+    slot_oh = jax.nn.one_hot(slot, capacity, dtype=x.dtype)
+    sel = dst_oh[:, :, None] * slot_oh[:, None, :] \
+        * (keep > 0)[:, None, None].astype(x.dtype)
+    return jnp.einsum("tsc,td->scd", sel, x)
+
+
+def combine_ref(y: jax.Array, dst: jax.Array, keep: jax.Array,
+                slot: jax.Array, weights: jax.Array) -> jax.Array:
+    S, C, D = y.shape
+    dstc = jnp.clip(dst.astype(jnp.int32), 0, S - 1)
+    dst_oh = jax.nn.one_hot(dstc, S, dtype=jnp.float32)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32)
+    sel = dst_oh[:, :, None] * slot_oh[:, None, :] \
+        * ((keep > 0).astype(jnp.float32) * weights)[:, None, None]
+    return jnp.einsum("tsc,scd->td", sel,
+                      y.astype(jnp.float32)).astype(y.dtype)

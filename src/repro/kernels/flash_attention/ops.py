@@ -1,0 +1,51 @@
+"""Public entry point for the flash-attention kernel.
+
+Accepts the model-zoo layout ([B, S, H, D] / [B, S, Kv, D]), pads sequence
+lengths to tile multiples, transposes to the kernel's head-major layout and
+dispatches. On CPU hosts the kernel body runs under ``interpret=True`` (the
+validation mode this container uses); on TPU it compiles through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_hm
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 256, block_k: int = 512,
+                    q_offset: int = 0, interpret: bool | None = None
+                    ) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Sk, Kv, D] -> [B, Sq, H, D]."""
+    if interpret is None:
+        interpret = _should_interpret()
+    B, Sq, H, D = q.shape
+    _, Sk, Kv, _ = k.shape
+
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(128, Sk))
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+
+    qh = jnp.moveaxis(q, 2, 1)                    # [B, H, Sq, D]
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    if pq:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    o = flash_attention_hm(qh, kh, vh, causal=causal, window=window,
+                           block_q=bq, block_k=bk, q_offset=q_offset,
+                           true_k=Sk, interpret=interpret)
+    o = o[:, :, :Sq]
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Naive materialised-score attention (O(S^2) memory) — deliberately independent
+of both the kernel and the chunked production path in
+``repro.models.attention`` so the three implementations cross-check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  q_offset: int = 0) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Sk, Kv, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    _, Sk, Kv, _ = k.shape
+    G = H // Kv
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * D ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)

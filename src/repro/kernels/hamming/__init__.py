@@ -1,0 +1,2 @@
+from repro.kernels.hamming.ops import (  # noqa: F401
+    hamming_decode, hamming_encode, multiply_const)

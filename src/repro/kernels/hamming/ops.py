@@ -1,0 +1,65 @@
+"""Public entry points for the Hamming / multiplier kernels.
+
+Words are uint32 on the wire (the WB bus width); the kernel computes in
+int32 lanes (TPU has no uint32 ALU distinction for these ops) and the
+wrapper reinterprets. 1-D word streams are tiled to (rows, 1024) blocks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hamming.kernel import decode_call, encode_call, mul_call
+
+_COLS = 1024
+_ROWS = 8
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(x: jax.Array) -> Tuple[jax.Array, int]:
+    x = jnp.asarray(x)
+    T = x.shape[0]
+    per = _ROWS * _COLS
+    pad = (-T) % per
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    xi = x.view(jnp.int32) if x.dtype == jnp.uint32 else x.astype(jnp.int32)
+    return xi.reshape(-1, _COLS), T
+
+
+def _from_tiles(x: jax.Array, T: int) -> jax.Array:
+    return x.reshape(-1)[:T].view(jnp.uint32)
+
+
+def hamming_encode(data: jax.Array, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """Encode the low 26 bits of each uint32 word into a 31-bit codeword."""
+    if interpret is None:
+        interpret = _should_interpret()
+    tiles, T = _to_tiles(data)
+    return _from_tiles(encode_call(tiles, interpret=interpret), T)
+
+
+def hamming_decode(code: jax.Array, *, interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Decode codewords; returns (data26, corrected_flag)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    tiles, T = _to_tiles(code)
+    data, corr = decode_call(tiles, interpret=interpret)
+    return _from_tiles(data, T), _from_tiles(corr, T)
+
+
+def multiply_const(data: jax.Array, constant: int = 3, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """32-bit wraparound constant multiply (the paper's multiplier module)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    tiles, T = _to_tiles(data)
+    return _from_tiles(mul_call(tiles, constant=constant,
+                                interpret=interpret), T)

@@ -1,0 +1,20 @@
+"""Oracle for the Hamming kernels: the numpy bit-exact implementation from
+the cycle-level hardware model (``repro.core.hw.modules``)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hw.modules import (constant_multiply, hamming3126_decode,
+                                   hamming3126_encode)
+
+
+def encode_ref(data: np.ndarray) -> np.ndarray:
+    return hamming3126_encode(np.asarray(data, dtype=np.uint32))
+
+
+def decode_ref(code: np.ndarray):
+    return hamming3126_decode(np.asarray(code, dtype=np.uint32))
+
+
+def multiply_ref(data: np.ndarray, constant: int = 3) -> np.ndarray:
+    return constant_multiply(np.asarray(data, dtype=np.uint32), constant)

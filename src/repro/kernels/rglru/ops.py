@@ -1,0 +1,38 @@
+"""Public entry point for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_call
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rglru_scan_kernel(u: jax.Array, a: jax.Array,
+                      h0: jax.Array | None = None, *, chunk: int = 256,
+                      block_l: int = 512, interpret: bool | None = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Drop-in for ``repro.models.rglru.rglru_scan``.
+
+    u: [B, S, L] gated inputs; a: [B, S, L] decays in (0, 1).
+    Returns (h [B, S, L] in u.dtype, h_last [B, L] f32).
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    B, S, L = u.shape
+    chunk = min(chunk, S)
+    block_l = min(block_l, L)
+    assert S % chunk == 0 and L % block_l == 0
+    b = u.astype(jnp.float32)
+    if h0 is not None:
+        # Fold h0 in as a virtual first step: b_0 += a_0 * h0.
+        b = b.at[:, 0].add(a[:, 0].astype(jnp.float32)
+                           * h0.astype(jnp.float32))
+    h, h_last = rglru_call(a.astype(jnp.float32), b, chunk=chunk,
+                           block_l=block_l, interpret=interpret)
+    return h.astype(u.dtype), h_last

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RG-LRU kernel: direct sequential recurrence."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jax.Array, b: jax.Array,
+              h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t.  a, b: [B, S, L] -> (h [B,S,L], h_last)."""
+    B, S, L = a.shape
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    h_init = (jnp.zeros((B, L), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, t):
+        h = af[:, t] * h + bf[:, t]
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h_init, jnp.arange(S))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,34 @@
+"""Public entry point for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_call
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 256,
+             interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Model-layout SSD scan (drop-in for ``repro.models.ssm.ssd_chunked``).
+
+    x: [B, S, H, P]; dt: [B, S, H]; A: [H] (< 0); Bm, Cm: [B, S, N].
+    Returns (y [B, S, H, P], h_last [B, H, P, N]).
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    B, S, H, P = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "sequence must divide the SSD chunk"
+    xh = jnp.moveaxis(x, 2, 1)                                # [B, H, S, P]
+    dth = jnp.moveaxis(dt, 2, 1).astype(jnp.float32)          # [B, H, S]
+    dAh = dth * A.astype(jnp.float32)[None, :, None]
+    y, h_last = ssd_call(xh, dAh, dth, Bm, Cm, chunk=chunk,
+                         interpret=interpret)
+    return jnp.moveaxis(y, 1, 2), h_last

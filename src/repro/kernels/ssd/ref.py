@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD kernel: direct sequential recurrence.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t B_t^T
+    y_t = C_t . h_t        (per head, per channel)
+
+Deliberately the O(S) sequential form — independent of both the kernel's
+chunked algebra and the production ``ssd_chunked`` in ``repro.models.ssm``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dA: jax.Array, dt: jax.Array, Bm: jax.Array,
+            Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, H, S, P]; dA, dt: [B, H, S]; Bm, Cm: [B, S, N]."""
+    Bsz, H, S, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dAf = dA.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(h, t):
+        dec = jnp.exp(dAf[:, :, t])                           # [B, H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtf[:, :, t], xf[:, :, t],
+                         Bf[:, t])
+        h = h * dec[..., None, None] + upd                    # [B, H, P, N]
+        y = jnp.einsum("bhpn,bn->bhp", h, Cf[:, t])
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 2)                                # [B, H, S, P]
+    return y.astype(x.dtype), h_last

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before *any* jax
+initialisation, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (v5e-256); the multi-pod mesh adds a leading
+    2-pod data-parallel axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over whatever devices the host actually has (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+MESH_NAMES = {"pod": False, "multipod": True}

@@ -1,0 +1,10 @@
+from repro.models.config import (HybridConfig, LM_SHAPES, ModelConfig,
+                                 MoEConfig, SSMConfig, ShapeConfig,
+                                 shapes_for, skipped_shapes_for)
+from repro.models.lm import (DecodeState, DenseLM, EncDecLM, HybridLM, LMBase,
+                             SSMLM, build_model)
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "HybridConfig",
+           "ShapeConfig", "LM_SHAPES", "shapes_for", "skipped_shapes_for",
+           "build_model", "LMBase", "DenseLM", "SSMLM", "HybridLM",
+           "EncDecLM", "DecodeState"]

@@ -1,0 +1,162 @@
+"""Shared model primitives: norms, rope, initialisers, partition specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------------
+# Initialisers — all params are created through `make_param` so that the
+# partition-spec tree can be built from the same declarative tables.
+# ----------------------------------------------------------------------
+def normal_init(key: jax.Array, shape: Sequence[int], dtype, scale: float):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / max(1.0, fan_in) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(key: jax.Array, shape: Sequence[int], dtype, scale: float = 0.0):
+    del key, scale
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key: jax.Array, shape: Sequence[int], dtype, scale: float = 0.0):
+    del key, scale
+    return jnp.ones(shape, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter definition: shape + logical sharding + init."""
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]          # logical axes, see LOGICAL_RULES
+    init: Callable = normal_init
+    scale: float = 1.0
+
+
+# Logical-axis -> mesh-axis rules. `fsdp` shards the d_model/storage dim over
+# the data axis (ZeRO-3 style weight sharding); `tp` shards output features
+# over the model axis (Megatron style). Batch goes over (pod, data).
+LOGICAL_RULES: Dict[str, Optional[Any]] = {
+    "fsdp": "data",
+    "tp": "model",
+    "layers": None,
+    "experts": None,
+    "batch": ("pod", "data"),
+    "batch_1pod": "data",
+    None: None,
+}
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], *, multi_pod: bool,
+                    rules: Optional[Dict[str, Any]] = None) -> P:
+    rules = dict(LOGICAL_RULES if rules is None else rules)
+    if not multi_pod:
+        rules["batch"] = "data"
+    out = []
+    for a in axes:
+        m = rules.get(a, None) if a is not None else None
+        out.append(m)
+    return P(*out)
+
+
+def init_params(defs: Dict[str, Any], key: jax.Array, dtype) -> Params:
+    """Materialise a (possibly nested) dict of ParamDefs."""
+    flat, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(flat))
+    leaves = [d.init(k, d.shape, dtype, d.scale) for d, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def spec_tree(defs: Dict[str, Any], *, multi_pod: bool) -> Params:
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.spec, multi_pod=multi_pod),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def shape_tree(defs: Dict[str, Any], dtype) -> Params:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ----------------------------------------------------------------------
+# scan-or-unroll: one knob for every sequential loop in the model zoo
+# ----------------------------------------------------------------------
+def scan_or_unroll(fn, carry, xs, unroll: bool, length: Optional[int] = None):
+    """``jax.lax.scan`` or an unrolled python loop over the leading axis.
+
+    Unrolled mode exists for two reasons: (i) XLA pipelines collectives
+    across unrolled bodies (a §Perf lever), and (ii) ``cost_analysis``
+    counts a while-loop body ONCE regardless of trip count, so the roofline
+    validation harness compiles small fully-unrolled configs to get exact
+    FLOP/byte counts (see launch/costfit.py)."""
+    if not unroll:
+        return jax.lax.scan(fn, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else jax.tree.map(lambda p: p[i], xs)
+        carry, y = fn(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * gamma
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., :, None, :]                          # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 true_vocab: int) -> jax.Array:
+    """Cross-entropy in f32 with padded-vocab masking; mean over tokens."""
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > true_vocab:
+        neg = jnp.finfo(jnp.float32).min
+        mask = jnp.arange(logits.shape[-1]) < true_vocab
+        logits = jnp.where(mask, logits, neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,34 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef
+
+
+def mlp_defs(d_model: int, d_ff: int, act: str) -> Dict[str, ParamDef]:
+    """Gated variants fuse gate+up into one projection for a single GEMM."""
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_in": ParamDef((d_model, 2 * d_ff), ("fsdp", "tp")),
+            "w_out": ParamDef((d_ff, d_model), ("tp", "fsdp")),
+        }
+    return {
+        "w_in": ParamDef((d_model, d_ff), ("fsdp", "tp")),
+        "w_out": ParamDef((d_ff, d_model), ("tp", "fsdp")),
+    }
+
+
+def mlp_apply(params, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"])
+    if act in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        g = jax.nn.silu(gate.astype(jnp.float32)) if act == "swiglu" \
+            else jax.nn.gelu(gate.astype(jnp.float32))
+        h = (g * up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])

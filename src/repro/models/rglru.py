@@ -1,0 +1,133 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_r u_t + b_r)            (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)            (input gate)
+    a_t = exp(-c * softplus(L) * r_t)       (c = 8, L learnable)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is elementwise-diagonal, so prefill/train parallelises with a
+chunked associative scan (log-depth within a chunk, sequential carry across
+chunks — bounded memory at 32k/524k). The gate projections use 16-block
+block-diagonal weights as in the published model. The recurrent block wraps
+the RG-LRU in the Griffin layout: (gate branch: linear+GeLU) * (conv1d +
+RG-LRU branch), then a linear out-projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, ones_init, zeros_init
+
+RG_LRU_C = 8.0
+N_GATE_BLOCKS = 16
+
+
+def rglru_defs(d_model: int, lru_width: int) -> Dict[str, ParamDef]:
+    blk = lru_width // N_GATE_BLOCKS
+    return {
+        "w_gate": ParamDef((d_model, lru_width), ("fsdp", "tp")),
+        "w_branch": ParamDef((d_model, lru_width), ("fsdp", "tp")),
+        "conv_w": ParamDef((4, lru_width), (None, "tp")),
+        "conv_b": ParamDef((lru_width,), ("tp",), init=zeros_init),
+        "w_r": ParamDef((N_GATE_BLOCKS, blk, blk), (None, None, "tp")),
+        "b_r": ParamDef((lru_width,), ("tp",), init=zeros_init),
+        "w_i": ParamDef((N_GATE_BLOCKS, blk, blk), (None, None, "tp")),
+        "b_i": ParamDef((lru_width,), ("tp",), init=zeros_init),
+        "lam": ParamDef((lru_width,), ("tp",), init=ones_init),
+        "w_out": ParamDef((lru_width, d_model), ("tp", "fsdp")),
+    }
+
+
+def _block_diag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u: [B, S, lru]; w: [nb, blk, blk] block-diagonal projection."""
+    B, S, L = u.shape
+    nb, blk, _ = w.shape
+    ub = u.reshape(B, S, nb, blk)
+    out = jnp.einsum("bsnk,nkj->bsnj", ub, w).reshape(B, S, L)
+    return out + b
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def rglru_scan(u: jax.Array, a: jax.Array, h0: jax.Array | None,
+               chunk: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) i u_t (the gated input is prefolded).
+
+    u: [B, S, L] gated inputs; a: [B, S, L] decay in (0,1).
+    Chunked associative scan; returns (h [B,S,L], h_last [B,L]).
+    """
+    B, S, L = u.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    af = a.astype(jnp.float32).reshape(B, nc, Q, L)
+    uf = u.astype(jnp.float32).reshape(B, nc, Q, L)
+
+    def chunk_body(h, inp):
+        ac, uc = inp                               # [B, Q, L]
+
+        def op(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        aa, hh = jax.lax.associative_scan(op, (ac, uc), axis=1)
+        hh = hh + aa * h[:, None]                  # fold in the carry
+        return hh[:, -1], hh
+
+    h_init = (jnp.zeros((B, L), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, hs = jax.lax.scan(chunk_body, h_init,
+                              (jnp.moveaxis(af, 1, 0), jnp.moveaxis(uf, 1, 0)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, L)
+    return h.astype(u.dtype), h_last
+
+
+def rglru_block_apply(params, x: jax.Array,
+                      h0: jax.Array | None = None,
+                      conv_tail: jax.Array | None = None, *,
+                      decode: bool = False):
+    """Griffin recurrent block. Returns (y, h_last, new_conv_tail)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", x, params["w_gate"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    u_in = jnp.einsum("bsd,dl->bsl", x, params["w_branch"])
+    new_tail = None
+    if decode:
+        u = _causal_conv(u_in, params["conv_w"], params["conv_b"], conv_tail)
+        new_tail = jnp.concatenate([conv_tail, u_in], axis=1)[:, 1:]
+    else:
+        u = _causal_conv(u_in, params["conv_w"], params["conv_b"])
+
+    r = jax.nn.sigmoid(_block_diag(u, params["w_r"], params["b_r"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(u, params["w_i"], params["b_i"])
+                       .astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+             * i * u.astype(jnp.float32)).astype(x.dtype)
+
+    if decode:
+        assert x.shape[1] == 1 and h0 is not None
+        h_new = (h0.astype(jnp.float32) * a[:, 0]
+                 + gated[:, 0].astype(jnp.float32))
+        h = h_new[:, None].astype(x.dtype)
+        h_last = h_new
+    else:
+        h, h_last = rglru_scan(gated, a.astype(jnp.float32), h0)
+
+    y = h * gate
+    return jnp.einsum("bsl,ld->bsd", y, params["w_out"]), h_last, new_tail

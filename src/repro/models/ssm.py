@@ -1,0 +1,163 @@
+"""Mamba-2 block — chunked State-Space Duality (SSD), faithful to
+arXiv:2405.21060: within-chunk quadratic form + inter-chunk linear recurrence.
+
+Shapes (per layer): d_inner = expand * d_model, H heads of dim P, state N.
+The in-projection produces (z, x, B, C, dt); (x, B, C) pass through a causal
+depthwise conv of width 4; the SSD scan uses per-head scalar decay
+``A = -exp(a_log)``. Decode keeps an O(1) state: [B, H, P, N] + conv tail —
+which is why mamba2 runs the 524k-decode shape that dense attention cannot.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ParamDef, ones_init, rms_norm,
+                                 scan_or_unroll, zeros_init)
+from repro.models.config import SSMConfig
+
+
+def ssm_defs(d_model: int, ssm: SSMConfig) -> Dict[str, ParamDef]:
+    d_inner = ssm.expand * d_model
+    H = ssm.n_heads(d_model)
+    N = ssm.d_state
+    conv_dim = d_inner + 2 * N
+    d_in = 2 * d_inner + 2 * N + H
+    return {
+        "in_proj": ParamDef((d_model, d_in), ("fsdp", "tp")),
+        "conv_w": ParamDef((ssm.conv_width, conv_dim), (None, "tp")),
+        "conv_b": ParamDef((conv_dim,), ("tp",), init=zeros_init),
+        "a_log": ParamDef((H,), (None,), init=ones_init),
+        "dt_bias": ParamDef((H,), (None,), init=zeros_init),
+        "d_skip": ParamDef((H,), (None,), init=ones_init),
+        "norm_g": ParamDef((d_inner,), ("tp",), init=ones_init),
+        "out_proj": ParamDef((d_inner, d_model), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv, width W: x [B, S, C], w [W, C].
+
+    ``tail``: previous W-1 inputs for decode continuation [B, W-1, C].
+    """
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(h: jax.Array, d_inner: int, N: int, H: int):
+    z, xBC, dt = jnp.split(h, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: jax.Array | None = None, *, unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H] (>=0); A: [H] (<0);
+    Bm, Cm: [B, S, N] (single group). Returns (y [B, S, H, P], h_last
+    [B, H, P, N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "sequence must divide the SSD chunk"
+    nc = S // Q
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+
+    dA = dtf * A                                   # [B, nc, Q, H] (log decay)
+    cum = jnp.cumsum(dA, axis=2)                   # inclusive within chunk
+
+    # --- within-chunk (quadratic) term ---------------------------------
+    # G[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j  for i >= j
+    CB = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)     # [B, nc, Q, Q]
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], li, -jnp.inf))
+    G = CB[..., None] * decay * dtf[:, :, None, :, :]    # [B,nc,i,j,H]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", G, xf)
+
+    # --- chunk-end states ----------------------------------------------
+    # h_end_c = sum_j exp(cum_Q - cum_j) * dt_j * x_j B_j^T  (+ carry)
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)            # [B, nc, Q, H]
+    states = jnp.einsum("bcjh,bcjhp,bcjn->bchpn",
+                        dec_end * dtf, xf, Bf)            # [B, nc, H, P, N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B, nc, H]
+
+    def carry_body(h, inp):
+        st, cd = inp                                      # [B,H,P,N], [B,H]
+        h_new = h * cd[..., None, None] + st
+        return h_new, h
+
+    h_init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_starts = scan_or_unroll(
+        carry_body, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=unroll)
+    h_starts = jnp.moveaxis(h_starts, 0, 1)               # [B, nc, H, P, N]
+
+    # --- inter-chunk contribution: C_i . (exp(cum_i) * h_start) ---------
+    y_off = jnp.einsum("bcin,bcihpn->bcihp",
+                       Cf, jnp.exp(cum)[..., None, None]
+                       * h_starts[:, :, None])
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_last
+
+
+def ssm_apply(params, x: jax.Array, ssm: SSMConfig,
+              state: jax.Array | None = None,
+              conv_tail: jax.Array | None = None, *, decode: bool = False,
+              unroll: bool = False):
+    """Full Mamba-2 mixer. Returns (y, new_state, new_conv_tail)."""
+    B, S, d_model = x.shape
+    d_inner = ssm.expand * d_model
+    H, N, P = ssm.n_heads(d_model), ssm.d_state, ssm.head_dim
+
+    h = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xBC, dt_raw = _split_proj(h, d_inner, N, H)
+    new_tail = None
+    if decode:
+        xBC_in = xBC
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_tail)
+        new_tail = jnp.concatenate([conv_tail, xBC_in], axis=1)[:, 1:]
+    else:
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if decode:
+        # O(1) state update: h' = exp(dt A) h + dt x B^T ; y = h' C + D x.
+        assert S == 1 and state is not None
+        dec = jnp.exp(dt[:, 0] * A)                       # [B, H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xs[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32))
+        h_new = state * dec[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+        new_state = h_new
+    else:
+        y, new_state = ssd_chunked(xs, dt, A, Bm, Cm, ssm.chunk, h0=state,
+                                   unroll=unroll)
+
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm_g"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, new_state, new_tail

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, OptState, cosine_schedule
+from repro.optim.compress import (compress_int8, decompress_int8,
+                                  error_feedback_update)
+
+__all__ = ["AdamW", "OptState", "cosine_schedule",
+           "compress_int8", "decompress_int8", "error_feedback_update"]

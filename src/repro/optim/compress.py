@@ -1,0 +1,39 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DP) axis.
+
+At 2 pods the pod-axis gradient reduce crosses the slowest links in the
+system (data-centre network / inter-pod ICI), so gradients are compressed to
+int8 with per-tensor scales before the cross-pod all-reduce and the
+quantisation error is carried forward (error feedback keeps SGD/Adam unbiased
+to first order — Seide et al. 2014; Karimireddy et al. 2019).
+
+Usage (inside the train step, pod axis only):
+
+    g_q, scale, err = compress_int8(g + err_prev)
+    g_sum = jax.lax.psum(g_q.astype(f32) * scale, "pod")  # 4x fewer bytes
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (int8 values, f32 scale, residual error)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    err = gf - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_update(grads, errors):
+    """Fold the previous round's quantisation error into this round's grads."""
+    if errors is None:
+        return grads
+    return jax.tree.map(lambda g, e: g + e.astype(g.dtype), grads, errors)

@@ -1,0 +1,134 @@
+"""Fault tolerance: heartbeats, step watchdogs, straggler statistics.
+
+The paper's WB interfaces carry *watchdog timers*: a master that waits too
+long for a grant or an ack raises GRANT_TIMEOUT / ACK_TIMEOUT and the error
+code lands in the register file for the manager to read (§IV-F). The fleet
+runtime keeps exactly that contract at step granularity:
+
+- ``StepWatchdog``    — per-step deadline; a blown deadline is the ack-
+  timeout analogue and marks the step's region as *suspect*;
+- ``HeartbeatMonitor``— regions report liveness; a missed-heartbeat region is
+  *failed* and handed to the ElasticResourceManager (demote-to-host path);
+- ``StragglerStats``  — EWMA of per-region step times; persistent outliers
+  (> ``threshold`` x fleet median for ``patience`` consecutive steps) trigger
+  region reassignment, the paper's "switch the grant to the next master".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.elastic import ElasticResourceManager
+from repro.core.registers import ErrorCode
+
+
+@dataclasses.dataclass
+class WatchdogEvent:
+    step: int
+    region: Optional[int]
+    elapsed_s: float
+    deadline_s: float
+    error: int = int(ErrorCode.ACK_TIMEOUT)
+
+
+class StepWatchdog:
+    """Per-step deadline — the WB watchdog at step granularity."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self.events: List[WatchdogEvent] = []
+        self._t0: Optional[float] = None
+        self._step = -1
+
+    def arm(self, step: int) -> None:
+        self._t0 = time.monotonic()
+        self._step = step
+
+    def check(self, region: Optional[int] = None) -> bool:
+        """True if the armed step beat its deadline."""
+        assert self._t0 is not None, "watchdog not armed"
+        elapsed = time.monotonic() - self._t0
+        ok = elapsed <= self.deadline_s
+        if not ok:
+            self.events.append(WatchdogEvent(self._step, region, elapsed,
+                                             self.deadline_s))
+        return ok
+
+
+class HeartbeatMonitor:
+    """Region liveness; integrates with the ERM's fail/heal path."""
+
+    def __init__(self, region_ids: List[int], timeout_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        now = clock()
+        self.last_beat: Dict[int, float] = {r: now for r in region_ids}
+        self.failed: Dict[int, float] = {}
+
+    def beat(self, region: int) -> None:
+        self.last_beat[region] = self._clock()
+        if region in self.failed:
+            del self.failed[region]
+
+    def sweep(self, erm: Optional[ElasticResourceManager] = None
+              ) -> List[int]:
+        """Mark regions with stale heartbeats failed; demote via ERM."""
+        now = self._clock()
+        newly_failed = []
+        for region, t in self.last_beat.items():
+            if region in self.failed:
+                continue
+            if now - t > self.timeout_s:
+                self.failed[region] = now
+                newly_failed.append(region)
+                if erm is not None:
+                    erm.fail_region(region)
+        return newly_failed
+
+    def heal(self, region: int,
+             erm: Optional[ElasticResourceManager] = None) -> None:
+        self.beat(region)
+        if erm is not None:
+            erm.heal_region(region)
+
+
+class StragglerStats:
+    """EWMA step times per region; flags persistent stragglers."""
+
+    def __init__(self, region_ids: List[int], alpha: float = 0.3,
+                 threshold: float = 1.5, patience: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma: Dict[int, Optional[float]] = {r: None for r in region_ids}
+        self.strikes: Dict[int, int] = {r: 0 for r in region_ids}
+
+    def record(self, region: int, step_s: float) -> None:
+        prev = self.ewma.get(region)
+        self.ewma[region] = (step_s if prev is None
+                             else self.alpha * step_s
+                             + (1 - self.alpha) * prev)
+
+    def _median(self) -> Optional[float]:
+        vals = sorted(v for v in self.ewma.values() if v is not None)
+        if not vals:
+            return None
+        return vals[len(vals) // 2]
+
+    def stragglers(self) -> List[int]:
+        """Regions whose EWMA exceeded threshold x median for ``patience``
+        consecutive sweeps."""
+        med = self._median()
+        out = []
+        if med is None or med == 0:
+            return out
+        for region, v in self.ewma.items():
+            if v is not None and v > self.threshold * med:
+                self.strikes[region] += 1
+            else:
+                self.strikes[region] = 0
+            if self.strikes[region] >= self.patience:
+                out.append(region)
+        return out

@@ -1,0 +1,111 @@
+"""Training loop: data feed, jit'd step, checkpoints, fault tolerance.
+
+The loop is mesh-agnostic: on this CPU container it drives smoke-scale
+models on a 1-device mesh; on a pod it drives the same ``StepBundle`` the
+dry-run lowers (same in/out shardings, same donation). Crash-restart is a
+constructor flag — the loop resumes from the newest committed checkpoint and
+re-seeds the data pipeline from the restored step (pure-function batches
+make that exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataPipeline
+from repro.models.config import ModelConfig
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamW, OptState, cosine_schedule
+from repro.runtime.ft import StepWatchdog
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    lr: float = 3e-4
+    warmup: int = 20
+    ckpt_every: int = 50
+    ckpt_keep: int = 2
+    step_deadline_s: float = 300.0
+    log_every: int = 10
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, run: TrainLoopConfig,
+                 ckpt_dir: Optional[Path] = None, *,
+                 resume: bool = False,
+                 on_log: Optional[Callable[[Dict[str, Any]], None]] = None):
+        self.cfg = cfg
+        self.run = run
+        self.model = build_model(cfg)
+        self.opt = AdamW(lr=cosine_schedule(run.lr, run.warmup, run.steps))
+        self.on_log = on_log or (lambda rec: None)
+        self.watchdog = StepWatchdog(run.step_deadline_s)
+        self.ckpt = (CheckpointManager(ckpt_dir, keep=run.ckpt_keep)
+                     if ckpt_dir is not None else None)
+        self.history: List[Dict[str, Any]] = []
+
+        self.pipeline = DataPipeline(
+            seed=run.seed, global_batch=run.global_batch,
+            seq_len=run.seq_len, vocab=cfg.vocab, kind="train")
+
+        def train_step(params, opt_state: OptState, batch):
+            loss, grads = jax.value_and_grad(self.model.loss)(params, batch)
+            updates, opt_state = self.opt.update(grads, opt_state, params)
+            params = AdamW.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+        # --- init or resume -------------------------------------------
+        self.params = self.model.init(jax.random.key(run.seed))
+        self.opt_state = self.opt.init(self.params)
+        self.start_step = 0
+        if resume and self.ckpt is not None:
+            got = self.ckpt.restore_latest((self.params, self.opt_state))
+            if got is not None:
+                self.start_step, (self.params, self.opt_state) = got
+        self.pipeline.restore(
+            dataclasses.replace(self.pipeline.state(), step=self.start_step))
+
+    # ------------------------------------------------------------------
+    def run_loop(self) -> List[Dict[str, Any]]:
+        run = self.run
+        self.pipeline.start()
+        try:
+            for step in range(self.start_step, run.steps):
+                self.watchdog.arm(step)
+                t0 = time.monotonic()
+                batch_np = next(self.pipeline)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                self.params, self.opt_state, loss = self._step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(loss)
+                dt = time.monotonic() - t0
+                self.watchdog.check()
+
+                if step % run.log_every == 0 or step == run.steps - 1:
+                    rec = {"step": step, "loss": loss, "step_s": dt}
+                    self.history.append(rec)
+                    self.on_log(rec)
+                if np.isnan(loss):
+                    raise FloatingPointError(f"NaN loss at step {step}")
+                if self.ckpt is not None and (step + 1) % run.ckpt_every == 0:
+                    self.ckpt.save_async(step + 1,
+                                         (self.params, self.opt_state),
+                                         extra={"loss": loss})
+        finally:
+            self.pipeline.stop()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        return self.history

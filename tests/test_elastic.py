@@ -1,0 +1,198 @@
+"""Elastic Resource Manager: placement invariants, grow/shrink/fail paths,
+register-file synthesis, and hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.elastic import (ON_SERVER, ElasticResourceManager, Region)
+from repro.core.module import ModuleFootprint
+from repro.core.registers import validate_registers
+
+GB = 1 << 30
+
+
+def make_erm(n_regions=3, hbm=16 * GB):
+    return ElasticResourceManager(
+        [Region(rid=i, n_chips=16, hbm_bytes=hbm) for i in range(n_regions)])
+
+
+def fp(param_gb=1):
+    return ModuleFootprint(param_bytes=param_gb * GB, flops_per_token=1e9,
+                           activation_bytes_per_token=4096)
+
+
+def check_invariants(erm):
+    """Global consistency: region<->tenant bookkeeping is a bijection."""
+    placed = {}
+    for name, st_ in erm.tenants.items():
+        for i, p in enumerate(st_.placement):
+            if p != ON_SERVER:
+                assert p not in placed, "two modules share a region"
+                placed[p] = (name, i)
+    for rid, r in erm.regions.items():
+        if r.tenant is not None:
+            assert placed.get(rid) == (r.tenant, r.module_idx)
+            assert r.healthy, "unhealthy region still allocated"
+        else:
+            assert rid not in placed
+
+
+class TestPlacement:
+    def test_submit_places_then_overflows_to_server(self):
+        erm = make_erm(n_regions=2)
+        placement = erm.submit("app", [fp(), fp(), fp()])
+        assert placement[:2] == [0, 1]
+        assert placement[2] == ON_SERVER
+        check_invariants(erm)
+
+    def test_release_promotes_waiting_module(self):
+        """§IV-A: when a region frees, the on-server module moves in."""
+        erm = make_erm(n_regions=2)
+        erm.submit("a", [fp(), fp()])
+        erm.submit("b", [fp()])
+        assert erm.placement_of("b") == [ON_SERVER]
+        erm.release("a")
+        assert erm.placement_of("b") != [ON_SERVER]
+        assert any(e.kind == "promote" for e in erm.events)
+        check_invariants(erm)
+
+    def test_module_too_large_for_any_region_stays_on_server(self):
+        erm = make_erm(n_regions=2, hbm=1 * GB)
+        placement = erm.submit("big", [fp(param_gb=8)])
+        assert placement == [ON_SERVER]
+        check_invariants(erm)
+
+    def test_shrink_then_grow_roundtrip(self):
+        erm = make_erm(n_regions=3)
+        erm.submit("a", [fp(), fp(), fp()])
+        erm.shrink("a", 1)
+        assert erm.tenants["a"].placed_count == 1
+        check_invariants(erm)
+        erm.grow("a", None)
+        assert erm.tenants["a"].placed_count == 3
+        check_invariants(erm)
+
+    def test_shrink_frees_regions_for_other_tenant(self):
+        erm = make_erm(n_regions=3)
+        erm.submit("a", [fp(), fp(), fp()])
+        erm.submit("b", [fp()])
+        assert erm.placement_of("b") == [ON_SERVER]
+        erm.shrink("a", 2)
+        assert erm.placement_of("b") != [ON_SERVER]
+        check_invariants(erm)
+
+
+class TestFailureHandling:
+    def test_region_failure_demotes_module(self):
+        erm = make_erm(n_regions=2)
+        erm.submit("a", [fp(), fp()])
+        erm.fail_region(0)
+        assert not erm.regions[0].healthy
+        assert ON_SERVER in erm.placement_of("a")
+        check_invariants(erm)
+
+    def test_failed_module_relocates_if_region_free(self):
+        erm = make_erm(n_regions=3)
+        erm.submit("a", [fp(), fp()])        # region 2 stays free
+        erm.fail_region(0)
+        assert erm.placement_of("a") == [2, 1]
+        check_invariants(erm)
+
+    def test_heal_promotes_waiters(self):
+        erm = make_erm(n_regions=2)
+        erm.submit("a", [fp(), fp()])
+        erm.fail_region(0)
+        erm.fail_region(1)
+        assert erm.placement_of("a") == [ON_SERVER, ON_SERVER]
+        erm.heal_region(0)
+        assert erm.tenants["a"].placed_count == 1
+        check_invariants(erm)
+
+    def test_utilization_tracks_healthy_regions_only(self):
+        erm = make_erm(n_regions=4)
+        erm.submit("a", [fp(), fp()])
+        assert erm.utilization() == pytest.approx(0.5)
+        erm.fail_region(3)
+        # 2 used of 3 healthy (module from region 3 wasn't there).
+        assert erm.utilization() == pytest.approx(2 / 3)
+
+
+class TestRegisterSynthesis:
+    def test_tenant_isolation_masks(self):
+        """A tenant's regions may reach each other + host, nothing else."""
+        erm = make_erm(n_regions=4)
+        erm.submit("a", [fp(), fp()])        # regions 0, 1 -> ports 1, 2
+        erm.submit("b", [fp(), fp()])        # regions 2, 3 -> ports 3, 4
+        regs = erm.build_registers()
+        validate_registers(regs)
+        allowed = np.asarray(regs.allowed)
+        assert allowed[1, 2] and allowed[2, 1]          # a <-> a
+        assert allowed[3, 4] and allowed[4, 3]          # b <-> b
+        assert not allowed[1, 3] and not allowed[2, 4]  # a x b blocked
+        assert allowed[1, 0] and allowed[0, 3]          # host reachable
+
+    def test_destination_chain_points_to_next_module(self):
+        erm = make_erm(n_regions=3)
+        erm.submit("a", [fp(), fp(), fp()])
+        regs = erm.build_registers()
+        dest = np.asarray(regs.dest)
+        assert dest[1] == 2 and dest[2] == 3        # module i -> module i+1
+        assert dest[3] == 0                         # last -> host (§IV-A)
+
+    def test_on_server_module_routes_via_host(self):
+        erm = make_erm(n_regions=1)
+        erm.submit("a", [fp(), fp()])               # module 1 on server
+        regs = erm.build_registers()
+        assert int(regs.dest[1]) == 0               # region 0 -> host port
+
+    def test_unhealthy_region_port_held_in_reset(self):
+        erm = make_erm(n_regions=2)
+        erm.submit("a", [fp(), fp()])
+        erm.fail_region(1)
+        regs = erm.build_registers()
+        assert bool(regs.reset[2])                  # port of region 1
+
+    def test_reconfig_cost_scales_with_weights(self):
+        erm = make_erm()
+        assert (erm.reconfig_cost_s(fp(param_gb=8))
+                > erm.reconfig_cost_s(fp(param_gb=1)))
+
+
+@given(st.lists(st.tuples(st.integers(1, 4), st.booleans()),
+                min_size=1, max_size=8),
+       st.integers(2, 6))
+@settings(max_examples=50, deadline=None)
+def test_property_invariants_hold_under_event_sequences(tenant_specs,
+                                                        n_regions):
+    """Random submit/release/fail/heal sequences never corrupt bookkeeping."""
+    erm = make_erm(n_regions=n_regions)
+    rng = np.random.default_rng(42)
+    for i, (n_modules, _) in enumerate(tenant_specs):
+        erm.submit(f"t{i}", [fp() for _ in range(n_modules)])
+        check_invariants(erm)
+    for i, (_, do_release) in enumerate(tenant_specs):
+        op = rng.integers(0, 3)
+        if op == 0 and do_release:
+            erm.release(f"t{i}")
+        elif op == 1:
+            erm.fail_region(int(rng.integers(0, n_regions)))
+        else:
+            erm.heal_region(int(rng.integers(0, n_regions)))
+        check_invariants(erm)
+    regs = erm.build_registers()
+    validate_registers(regs)
+
+
+def test_elasticity_increases_throughput_model():
+    """The paper's core claim restated for the fleet: a tenant's modules on
+    regions beat the same modules on-server (reconfig amortised)."""
+    erm = make_erm(n_regions=3)
+    erm.submit("a", [fp(), fp(), fp()])
+    placed_all = erm.tenants["a"].placed_count
+    erm.shrink("a", 1)
+    placed_one = erm.tenants["a"].placed_count
+    assert placed_all == 3 and placed_one == 1
+    events = [e.kind for e in erm.events]
+    assert events.count("allocate") == 3
+    assert events.count("demote") == 2

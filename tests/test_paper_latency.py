@@ -1,0 +1,147 @@
+"""§V-E / Fig 6: the cycle-level crossbar reproduces the paper's latencies."""
+import pytest
+
+from repro.core.hw.crossbar import (CrossbarSim, ErrorCode, MasterRequest,
+                                    best_case_time_to_grant,
+                                    request_completion_cc,
+                                    worst_case_completion_cc,
+                                    worst_case_time_to_grant)
+from repro.core.hw.registers import RegisterFile
+
+
+def make_sim(n_ports=4, quotas=None):
+    rf = RegisterFile(n_ports=n_ports)
+    for m in range(n_ports):
+        rf.set_allowed_mask(m, (1 << n_ports) - 1)
+        if quotas:
+            for s in range(n_ports):
+                rf.set_quota(s, m, quotas)
+    return CrossbarSim(n_ports=n_ports, regfile=rf)
+
+
+class TestPaperNumbers:
+    """The four latency numbers quoted in §V-E."""
+
+    def test_best_case_time_to_grant_is_4cc(self):
+        assert best_case_time_to_grant() == 4
+        sim = make_sim()
+        sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0010,
+                                 n_words=8))
+        (res,) = sim.run()
+        assert res.time_to_grant == 4
+        assert res.error == ErrorCode.OK
+
+    def test_request_completion_8_packets_is_13cc(self):
+        assert request_completion_cc(8) == 13
+        sim = make_sim()
+        sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0010,
+                                 n_words=8))
+        (res,) = sim.run()
+        assert res.completion_latency == 13
+
+    def test_worst_case_3_masters_grant_28cc_completion_37cc(self):
+        assert worst_case_time_to_grant(3, 8) == 28
+        assert worst_case_completion_cc(3, 8) == 37
+        sim = make_sim()
+        for m in (0, 1, 2):
+            sim.submit(MasterRequest(cycle=0, master=m, dst_onehot=0b1000,
+                                     n_words=8))
+        results = sim.run()
+        grants = sorted(r.time_to_grant for r in results)
+        completions = sorted(r.completion_latency for r in results)
+        assert grants[0] == 4          # first-served master
+        assert grants[-1] == 28        # last-served master (paper's number)
+        assert completions[-1] == 37
+
+    def test_fig6_worst_case_latency_is_linear(self):
+        """Fig 6: worst-case completion grows linearly with #contenders."""
+        lat = [worst_case_completion_cc(n, 8) for n in range(1, 9)]
+        diffs = {b - a for a, b in zip(lat, lat[1:])}
+        assert len(diffs) == 1         # constant increment == linear
+        assert lat[0] == 13
+
+    def test_sim_matches_closed_form_for_many_masters(self):
+        for n in (2, 3, 4):
+            sim = make_sim(n_ports=max(4, n + 1))
+            for m in range(n):
+                sim.submit(MasterRequest(cycle=0, master=m,
+                                         dst_onehot=0b1000, n_words=8))
+            results = sim.run()
+            worst = max(r.completion_latency for r in results)
+            assert worst == worst_case_completion_cc(n, 8)
+
+
+class TestIsolationAndErrors:
+    def test_invalid_destination_is_blocked_with_error(self):
+        sim = make_sim()
+        sim.regfile.set_allowed_mask(0, 0b0100)   # master 0 -> slave 2 only
+        sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0010))
+        (res,) = sim.run()
+        assert res.error == ErrorCode.INVALID_DEST
+        assert res.words_sent == 0
+        assert res.first_word_cycle is None
+
+    def test_error_lands_in_register_file(self):
+        sim = make_sim()
+        sim.regfile.set_allowed_mask(1, 0b0001)
+        sim.submit(MasterRequest(cycle=0, master=1, dst_onehot=0b0100,
+                                 app_id=2))
+        sim.run()
+        assert sim.regfile.pr_error(1) == int(ErrorCode.INVALID_DEST)
+        assert sim.regfile.app_error(2) == int(ErrorCode.INVALID_DEST)
+
+    def test_non_onehot_address_rejected(self):
+        sim = make_sim()
+        sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0110))
+        (res,) = sim.run()
+        assert res.error == ErrorCode.INVALID_DEST
+
+    def test_reset_port_makes_no_grants(self):
+        """§IV-C: a port in reset is isolated during reconfiguration."""
+        sim = make_sim()
+        sim.regfile.set_reset(0, True)            # port 0 held in reset
+        with pytest.raises(RuntimeError):
+            sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0010))
+
+
+class TestWRRQuota:
+    def test_quota_preemption_rotates_grant(self):
+        """Two masters, quota 4: service interleaves in 4-package sessions."""
+        sim = make_sim(quotas=4)
+        sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0100,
+                                 n_words=8))
+        sim.submit(MasterRequest(cycle=0, master=1, dst_onehot=0b0100,
+                                 n_words=8))
+        results = sim.run()
+        assert all(r.error == ErrorCode.OK for r in results)
+        assert all(r.words_sent == 8 for r in results)
+        assert all(r.grant_sessions == 2 for r in results)
+
+    def test_unlimited_quota_single_session(self):
+        sim = make_sim()                           # quota 0 = unlimited
+        sim.submit(MasterRequest(cycle=0, master=0, dst_onehot=0b0100,
+                                 n_words=32))
+        (res,) = sim.run()
+        assert res.grant_sessions == 1
+        assert res.completion_latency == request_completion_cc(32)
+
+    def test_higher_quota_lowers_total_time(self):
+        """§V-D: more packages per grant -> fewer handshakes -> faster."""
+        def total_cycles(quota):
+            sim = make_sim(quotas=quota)
+            for m in (0, 1, 2):
+                sim.submit(MasterRequest(cycle=0, master=m,
+                                         dst_onehot=0b1000, n_words=128))
+            return max(r.completion_cycle for r in sim.run())
+
+        assert total_cycles(128) < total_cycles(16)
+
+    def test_wrr_is_fair_under_contention(self):
+        """Equal quotas ⇒ words served per master differ by <= one session."""
+        sim = make_sim(quotas=8)
+        for m in (0, 1, 2):
+            sim.submit(MasterRequest(cycle=0, master=m, dst_onehot=0b1000,
+                                     n_words=64))
+        results = sim.run()
+        sessions = [r.grant_sessions for r in results]
+        assert max(sessions) - min(sessions) <= 1

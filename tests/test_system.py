@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests: §V-C/§V-D use case + area/power claims."""
+import numpy as np
+import pytest
+
+from repro.core.hw.area import (AreaModel, CROSSBAR_SYSTEM_FF,
+                                CROSSBAR_SYSTEM_LUT, EWB_4X_FF, EWB_4X_LUT,
+                                NOC_2X2_FF, NOC_2X2_LUT, TABLE_I)
+from repro.core.hw.system import (ElasticUseCase, PAPER_CASE1_MS,
+                                  PAPER_CASE3_MS, USE_CASE_WORDS)
+
+
+@pytest.fixture(scope="module")
+def usecase():
+    return ElasticUseCase()
+
+
+class TestElasticityUseCase:
+    """§V-C: execution time improves as modules migrate CPU -> FPGA."""
+
+    def test_case_times_match_paper_endpoints(self, usecase):
+        fig5 = usecase.figure5()
+        assert fig5[1] == pytest.approx(PAPER_CASE1_MS, rel=1e-6)
+        assert fig5[3] == pytest.approx(PAPER_CASE3_MS, rel=1e-6)
+
+    def test_elasticity_monotonically_improves(self, usecase):
+        fig5 = usecase.figure5()
+        assert fig5[1] > fig5[2] > fig5[3]
+
+    def test_data_path_is_bit_exact(self, usecase):
+        res = usecase.run_case(3)
+        assert res.data_ok
+        assert res.output.shape == (USE_CASE_WORDS,)
+
+    def test_case2_between_paper_endpoints(self, usecase):
+        fig5 = usecase.figure5()
+        assert PAPER_CASE3_MS < fig5[2] < PAPER_CASE1_MS
+
+
+class TestBandwidthAllocation:
+    """§V-D: raising WRR quotas 16 -> 128 improves execution time 5.24%-6%."""
+
+    def test_improvement_within_paper_band(self, usecase):
+        """The one-parameter host-sync model lands within 1.1% absolute of
+        the paper's two improvement figures (the paper does not publish the
+        host constants needed for an exact fit — see EXPERIMENTS.md)."""
+        table = usecase.bandwidth_table()
+        assert table[1] == pytest.approx(0.0524, abs=0.015)
+        assert table[3] == pytest.approx(0.06, abs=0.015)
+
+    def test_more_fpga_modules_benefit_more_from_bandwidth(self, usecase):
+        table = usecase.bandwidth_table()
+        assert table[3] > table[1]
+
+    def test_calibration_residuals_are_small(self, usecase):
+        for tag, resid in usecase.calibration_residuals.items():
+            assert abs(resid) < 0.015, (tag, resid)
+
+
+class TestAreaAndPowerClaims:
+    """§V-F/§V-G: Table I/II and the headline percentage claims."""
+
+    def test_table_i_totals_are_consistent(self):
+        """The paper's printed totals differ ~1-5% from its own column sums
+        (Table I is internally inconsistent); assert within that band."""
+        lut = sum(v[0] for k, v in TABLE_I.items() if k != "total")
+        ff = sum(v[1] for k, v in TABLE_I.items() if k != "total")
+        assert abs(lut - TABLE_I["total"][0]) / TABLE_I["total"][0] < 0.02
+        assert abs(ff - TABLE_I["total"][1]) / TABLE_I["total"][1] < 0.06
+
+    def test_61pct_fewer_luts_than_noc(self):
+        m = AreaModel()
+        assert m.lut_saving_vs_noc() == pytest.approx(0.61, abs=0.005)
+
+    def test_95pct_fewer_ffs_than_noc(self):
+        m = AreaModel()
+        assert m.ff_saving_vs_noc() == pytest.approx(0.95, abs=0.005)
+
+    def test_80x_less_power_than_noc(self):
+        assert AreaModel().power_ratio_vs_noc() == pytest.approx(80.0)
+
+    def test_ewb_comparison(self):
+        m = AreaModel()
+        assert m.lut_overhead_vs_ewb() == pytest.approx(0.486, abs=0.005)
+        assert m.ff_saving_vs_ewb() == pytest.approx(0.464, abs=0.005)
+
+    def test_request_completion_beats_noc(self):
+        m = AreaModel()
+        # 13 cc vs 22 cc (2-router path, the paper's explicit arithmetic).
+        assert m.noc_completion_cc(2) == 22
+        assert m.latency_saving_vs_noc(2) > 0.40
+        # The headline 69% corresponds to a ~4-router path.
+        assert m.latency_saving_vs_noc(4) == pytest.approx(0.69, abs=0.02)
+
+    def test_area_anchored_at_measured_point(self):
+        m = AreaModel()
+        assert m.crossbar_lut(4) == 475
+        assert m.crossbar_ff(4) == 60
+        assert m.system_lut(4) == pytest.approx(CROSSBAR_SYSTEM_LUT, abs=4)
+        assert m.system_ff(4) == pytest.approx(CROSSBAR_SYSTEM_FF, abs=4)
+
+    def test_lzc_arbiter_area_quadratic(self):
+        m = AreaModel()
+        assert m.crossbar_lut(8) == pytest.approx(4 * 475)
+
+    def test_register_count_scales_3_per_region(self):
+        assert AreaModel.register_count(3) == 20          # the prototype
+        assert AreaModel.register_count(4) == 23          # §V-G: +3/region
