@@ -1,87 +1,125 @@
-"""Elastic multi-tenant serving — the paper's §IV-A lifecycle on a fleet.
+"""Elastic multi-tenant serving through the unified ``repro.shell`` API.
 
-Two tenants share a 4-region pool. Tenant A (a 3-module chain) arrives
-first and takes 3 regions; tenant B arrives and gets the last region + one
-on-server module. When A shrinks, B's waiting module is promoted onto the
-freed region (the paper's "the manager checks again if there are any PR
-regions released"). A region failure demotes its module to the host and the
-register file is resynthesised each time — destinations, isolation masks and
-reset bits — with no tenant recompilation.
+The paper's §IV-A lifecycle, rebuilt on the event-driven shell: one
+``Shell`` owns the region pool, the live (delta-patched) register file and
+the event log; the heartbeat monitor posts fault events instead of being
+polled; and an ``ElasticServer`` serves *overlapping* multi-tenant request
+streams with continuous batching — new requests are admitted into freed
+decode slots while earlier ones are still mid-stream, with admission routed
+by ``app_id`` through the shell's register file.
 
-Alongside the control-plane story, the data plane actually serves requests
-(greedy decode on a small LM) before and after each reconfiguration.
+Control-plane script: submit A and B -> A shrinks (B's waiter promoted) ->
+a region fails via stale heartbeat (module demoted, port held in reset) ->
+heal (promoted back) -> A releases.  After every event the delta-synthesised
+register file is checked bit-identical to a full rebuild (``shell.verify``).
 
     PYTHONPATH=src python examples/elastic_serving.py
 """
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.elastic import (ON_SERVER, ElasticResourceManager, Region)
 from repro.core.module import ModuleFootprint
 from repro.runtime.ft import HeartbeatMonitor
-from repro.runtime.serve import Request, ServeLoop
+from repro.shell import ON_SERVER, Shell, Shrink, Submit
+from repro.shell.server import ElasticServer, StreamRequest
 
 GB = 1 << 30
 
 
-def show(erm, title):
+def show(shell, title):
     print(f"\n-- {title}")
-    for name in sorted(erm.tenants):
-        pl = erm.placement_of(name)
-        pretty = ["host" if p == ON_SERVER else f"R{p}" for p in pl]
-        print(f"   {name}: {pretty}")
-    print(f"   utilization={erm.utilization():.2f}")
-    regs = erm.build_registers()
-    print(f"   register file v{int(regs.version)}: "
-          f"dest={np.asarray(regs.dest).tolist()} "
+    for t in sorted(shell.state.tenants, key=lambda t: t.name):
+        pretty = ["host" if p == ON_SERVER else f"R{p}" for p in t.placement]
+        print(f"   {t.name}: {pretty}")
+    regs = shell.registers
+    last = shell.log[-1].plan if shell.log else None
+    delta = f", last delta: {last.delta.n_entries} entries" if last else ""
+    print(f"   utilization={shell.utilization():.2f}  "
+          f"epoch={shell.epoch}{delta}")
+    print(f"   registers: dest={np.asarray(regs.dest).tolist()} "
           f"reset={np.asarray(regs.reset).astype(int).tolist()}")
+    shell.verify()          # delta-patched file == full rebuild, invariants
 
 
 def main():
-    erm = ElasticResourceManager(
-        [Region(rid=i, n_chips=64, hbm_bytes=16 * GB) for i in range(4)])
-    monitor = HeartbeatMonitor([0, 1, 2, 3], timeout_s=10.0)
+    from repro.core.elastic import Region
+    shell = Shell([Region(rid=i, n_chips=64, hbm_bytes=16 * GB)
+                   for i in range(4)], policy="first_fit")
+    monitor = HeartbeatMonitor([0, 1, 2, 3], timeout_s=10.0, shell=shell)
 
     fp = lambda gb: ModuleFootprint(param_bytes=gb * GB,
                                     flops_per_token=2e9,
                                     activation_bytes_per_token=8192)
 
-    erm.submit("tenant_a", [fp(4), fp(4), fp(4)], app_id=0)
-    erm.submit("tenant_b", [fp(2), fp(2)], app_id=1)
-    show(erm, "after admission (B partially on-server)")
+    shell.post(Submit(tenant="tenant_a", footprints=(fp(4), fp(4), fp(4)),
+                      app_id=0))
+    shell.post(Submit(tenant="tenant_b", footprints=(fp(2), fp(2)),
+                      app_id=1))
+    show(shell, "after admission (B partially on-server)")
 
-    # --- data plane: tenant B serves requests from its current placement.
-    serve = ServeLoop(get_config("qwen2_5_3b", smoke=True), batch=2,
-                      max_len=64)
-    reqs = [Request(app_id=1, prompt=np.arange(6, dtype=np.int32), max_new=4),
-            Request(app_id=1, prompt=np.arange(3, dtype=np.int32), max_new=4)]
-    comps = serve.serve(reqs)
-    print(f"   B serves: {[c.tokens for c in comps]}")
+    # --- data plane: both tenants stream requests through one server.
+    server = ElasticServer(shell, n_slots=2)
+    server.register_model(0, get_config("tinyllama_1_1b", smoke=True),
+                          max_len=64)
+    server.register_model(1, get_config("qwen2_5_3b", smoke=True),
+                          max_len=64)
+    for start, max_new in ((2, 4), (5, 6)):
+        server.submit(StreamRequest(app_id=1,
+                                    prompt=np.arange(start, dtype=np.int32),
+                                    max_new=max_new))
+    server.step()           # both admitted, decoding begins
+    print(f"\n   serving: {server.active_count} active, "
+          f"{server.queued_count} queued (tick {server.tick})")
+
+    # Continuous batching: tenant A's stream arrives MID-DECODE and is
+    # admitted as soon as a slot rotates — no wave barrier.
+    server.submit(StreamRequest(app_id=0,
+                                prompt=np.arange(3, dtype=np.int32),
+                                max_new=3))
+    server.submit(StreamRequest(app_id=1,
+                                prompt=np.arange(4, dtype=np.int32),
+                                max_new=2))
+    comps = server.run()
+    print("   completions (rid, app, entry_port, admitted->finished tick):")
+    for c in sorted(comps, key=lambda c: c.rid):
+        print(f"     #{c.rid} app{c.app_id} port{c.entry_port} "
+              f"t{c.admitted_tick}->t{c.finished_tick}  tokens={c.tokens}")
+    overlapped = [c for c in comps if 0 < c.admitted_tick]
+    print(f"   {len(overlapped)} request(s) admitted while earlier "
+          f"requests were still decoding")
 
     # --- elasticity: A shrinks, B grows (§IV-A promote path).
-    erm.shrink("tenant_a", 2)
-    show(erm, "A shrinks to 2 regions -> B's module promoted")
+    shell.post(Shrink(tenant="tenant_a", n_regions=2))
+    show(shell, "A shrinks to 2 regions -> B's module promoted")
 
-    # --- failure: region 2 misses heartbeats; its module demotes to host.
+    # --- failure: region 2 misses heartbeats; the monitor POSTS the event.
     for healthy in (0, 1, 3):
         monitor.beat(healthy)
     monitor.last_beat[2] -= 100.0            # simulate stale heartbeat
-    failed = monitor.sweep(erm)
-    show(erm, f"region {failed} failed -> demote to host, port reset")
+    failed = monitor.sweep()
+    show(shell, f"region {failed} failed -> demote to host, port reset")
 
     # B still serves (degraded placement, same program).
-    comps = serve.serve(reqs)
-    print(f"   B serves after failure: {[c.tokens for c in comps]}")
+    server.submit(StreamRequest(app_id=1, prompt=np.arange(3, dtype=np.int32),
+                                max_new=3))
+    (comp,) = server.run()
+    print(f"   B serves after failure: {comp.tokens} "
+          f"(entry port {comp.entry_port})")
 
     # --- heal: the region returns, the waiter is promoted back.
-    monitor.heal(2, erm)
-    show(erm, "region healed -> promoted back")
+    monitor.heal(2)
+    show(shell, "region healed -> promoted back")
+
+    # --- release: A departs; the pool drains to B alone.
+    shell.release("tenant_a")
+    show(shell, "A released")
 
     # --- reconfiguration cost model (the ICAP analogue).
-    cost = erm.reconfig_cost_s(fp(4))
+    cost = shell.reconfig_cost_s(fp(4))
     print(f"\n   region reprogram cost for a 4 GB module: {cost:.2f} s "
           f"(restore at HBM bw + dispatch)")
-    print(f"   events: {[(e.kind, e.tenant, e.region) for e in erm.events]}")
+    print(f"   event log: "
+          f"{[(type(e.event).__name__, [a.kind for a in e.plan.actions]) for e in shell.log]}")
 
 
 if __name__ == "__main__":

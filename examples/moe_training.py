@@ -7,6 +7,11 @@ paper's error codes. Training runs the full production substrate — data
 pipeline (prefetching), AdamW + cosine schedule, async checkpointing,
 step watchdog — and asserts the loss actually falls.
 
+The run is registered as a tenant on a ``repro.shell.Shell``: the step
+watchdog is attached to the shell, so a blown deadline surfaces as a
+``WatchdogTimeout`` event on the shell's log instead of needing the caller
+to poll ``loop.watchdog.events``.
+
     PYTHONPATH=src python examples/moe_training.py [--steps 300]
 """
 import argparse
@@ -15,9 +20,12 @@ import time
 from pathlib import Path
 
 from repro.configs import get_config
+from repro.core.elastic import Region
+from repro.core.module import ModuleFootprint
 from repro.models.config import ModelConfig, MoEConfig
 from repro.models.lm import build_model
 from repro.runtime.train import TrainLoop, TrainLoopConfig
+from repro.shell import Shell, Submit
 
 # ~100M-param MoE: 8 layers, d=512, 8 experts (top-2), d_ff=1408.
 MOE_100M = ModelConfig(
@@ -39,6 +47,20 @@ def main():
     print(f"model: {MOE_100M.name}  params={model.n_params()/1e6:.1f}M "
           f"({MOE_100M.moe.n_experts} experts, top-{MOE_100M.moe.top_k})")
 
+    # Control plane: the training job is a tenant on the elastic shell; the
+    # step watchdog posts WatchdogTimeout events here (no polling).
+    GB = 1 << 30
+    shell = Shell([Region(rid=i, n_chips=16, hbm_bytes=8 * GB)
+                   for i in range(2)])
+    shell.post(Submit(
+        tenant="moe-train",
+        footprints=(ModuleFootprint(
+            param_bytes=model.n_params() * 4, flops_per_token=6e9,
+            activation_bytes_per_token=MOE_100M.d_model * 4),),
+        app_id=0))
+    print(f"shell: tenant 'moe-train' placed at "
+          f"{shell.placement_of('moe-train')}")
+
     run = TrainLoopConfig(steps=args.steps, global_batch=args.batch,
                           seq_len=args.seq, lr=6e-4, warmup=30,
                           ckpt_every=100, log_every=10, seed=0)
@@ -46,7 +68,8 @@ def main():
     loop = TrainLoop(MOE_100M, run, ckpt_dir=Path(args.ckpt),
                      on_log=lambda r: print(
                          f"  step {r['step']:4d}  loss {r['loss']:.4f}  "
-                         f"({r['step_s']:.2f}s)"))
+                         f"({r['step_s']:.2f}s)"),
+                     shell=shell)
     hist = loop.run_loop()
     dt = time.time() - t0
 
@@ -57,7 +80,10 @@ def main():
           f"({dt:.0f}s, {tok_s:,.0f} tok/s on CPU)")
     assert last < first - 0.3, "training did not converge"
     print("checkpoints:", sorted(p.name for p in Path(args.ckpt).iterdir()))
-    print("watchdog events:", len(loop.watchdog.events))
+    timeouts = [e for e in shell.log
+                if type(e.event).__name__ == "WatchdogTimeout"]
+    print(f"shell log: {len(shell.log)} events "
+          f"({len(timeouts)} watchdog timeouts)")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,14 @@ from repro.core.arbiter import DispatchPlan, combine, dispatch, wrr_dispatch_pla
 from repro.core.registers import CrossbarRegisters, ErrorCode
 
 
+def _axis_size(axis_name: str) -> int:
+    # jax<0.5 has no jax.lax.axis_size; psum of ones is the portable spelling.
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 # ----------------------------------------------------------------------
 # Local (single-shard) crossbar — dense one-hot dispatch, MXU-friendly.
 # ----------------------------------------------------------------------
@@ -86,7 +94,7 @@ def exchange_sharded(x: jax.Array, dst: jax.Array, regs: CrossbarRegisters,
     keep [T_local], slot [T_local]) where recv[i] holds what region ``i`` sent
     here. Reading recv as [capacity, n] (slot-major) is the WRR service order.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     keep, slot, _err = pairwise_dispatch_plan(dst, me, regs, capacity)
 
@@ -108,7 +116,7 @@ def combine_sharded(y: jax.Array, dst: jax.Array, keep: jax.Array,
                     slot: jax.Array, weights: jax.Array, capacity: int,
                     axis_name: str) -> jax.Array:
     """Inverse of :func:`exchange_sharded`: bring results home and weight them."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     back = jax.lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0,
                               tiled=False)                     # [n, cap, D]
     dst_oh = jax.nn.one_hot(dst, n, dtype=y.dtype)

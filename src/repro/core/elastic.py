@@ -1,43 +1,51 @@
-"""FPGA Elastic Resource Manager (§IV-A), re-expressed for a TPU fleet.
+"""FPGA Elastic Resource Manager (§IV-A) — legacy wrapper over ``repro.shell``.
 
-The control plane that makes the system *elastic*:
+.. deprecated::
+    The decision logic that used to live here has moved into the unified
+    shell API: pure planning in ``repro.shell.planner``, pluggable placement
+    policies in ``repro.shell.policy``, delta register synthesis in
+    ``repro.shell.regfile``, and the event-driven facade in
+    ``repro.shell.Shell``.  This module keeps the original mutable-looking
+    API importable — ``ElasticResourceManager``, ``Region``, ``TenantState``,
+    ``ReconfigEvent``, ``ON_SERVER`` — as a thin stateful wrapper that posts
+    events to the pure planner and materialises mutable views on demand.
+    New code should use ``repro.shell`` directly.
 
-- keeps track of regions that are available and which are allocated to which
-  application;
-- analyses a request in terms of required regions, allocates what is free and
-  leaves the remainder **on-server** (host-executed modules);
-- when a region frees up (another tenant shrinks/releases, or a failed region
-  heals), *promotes* an on-server module onto it, reprograms the region
-  (checkpoint-restore + recompile — the ICAP analogue) and re-points the
-  other modules' destination addresses via the register file;
-- on a region failure, demotes its module to on-server and re-points
-  destinations — the same mechanism run in reverse, which is what makes the
-  elasticity story double as the fault-tolerance story.
-
-All decisions are pure host-side bookkeeping; the data plane sees only new
-register-file values (and, on placement changes, a weight restore).
+Semantics are unchanged from the seed, with one deliberate fix: a module
+that cannot be placed *at admission* is logged as ``"spill"`` (it never held
+a region), distinct from ``"demote"`` (it lost one).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.module import ModuleFootprint
 from repro.core.registers import CrossbarRegisters
 
-# Reconfiguration cost model (the ICAP analogue): restoring a module's weights
-# onto a region streams bytes at HBM bandwidth + a recompile/dispatch cost.
-HBM_BYTES_PER_S = 819e9
-RECONFIG_FIXED_S = 0.5          # program dispatch + cache-hit compile
+# Placement sentinel (must equal repro.shell.state.ON_SERVER; the shell
+# package imports this module's siblings at init, so the value is duplicated
+# here rather than imported to keep `repro.core` importable on its own).
+ON_SERVER = -1
+
+# Cost-model constants now live in repro.shell.planner; re-exported lazily
+# (PEP 562) so importing this module never drags the shell package in.
+_SHELL_REEXPORTS = {"HBM_BYTES_PER_S", "RECONFIG_FIXED_S"}
 
 
-ON_SERVER = -1                   # placement value for host-executed modules
+def __getattr__(name):
+    if name in _SHELL_REEXPORTS:
+        from repro.shell import planner
+        return getattr(planner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
 class Region:
-    """A fixed-size slice of the mesh — the PR-region analogue."""
+    """A fixed-size slice of the mesh — the PR-region analogue.
+
+    (Mutable view kept for API compatibility; the source of truth is the
+    shell's immutable ``PoolState``.)"""
 
     rid: int
     n_chips: int
@@ -55,7 +63,7 @@ class Region:
 class TenantState:
     name: str
     footprints: List[ModuleFootprint]
-    placement: List[int] = dataclasses.field(default_factory=list)  # region id / ON_SERVER
+    placement: List[int] = dataclasses.field(default_factory=list)
     app_id: int = 0
     max_regions: Optional[int] = None       # elasticity cap set by shrink/grow
 
@@ -73,7 +81,7 @@ class TenantState:
 
 @dataclasses.dataclass
 class ReconfigEvent:
-    kind: str              # "allocate" | "promote" | "demote" | "release" | "fail"
+    kind: str    # "allocate" | "promote" | "demote" | "spill" | "release" | "fail" | "migrate"
     tenant: str
     module_idx: Optional[int]
     region: Optional[int]
@@ -82,158 +90,107 @@ class ReconfigEvent:
 
 
 class ElasticResourceManager:
-    """Region pool + tenant bookkeeping + register-file synthesis."""
+    """Region pool + tenant bookkeeping + register-file synthesis.
 
-    def __init__(self, regions: Sequence[Region], host_port: int = 0):
-        self.regions: Dict[int, Region] = {r.rid: r for r in regions}
-        self.tenants: Dict[str, TenantState] = {}
-        self.host_port = host_port          # crossbar port of the AXI/host bridge
+    Thin stateful wrapper: every verb posts one event to an internal
+    ``repro.shell.Shell`` and flattens the resulting plan's actions into the
+    legacy ``events`` log.  ``regions`` / ``tenants`` are materialised views
+    over the shell's immutable state (read them, don't mutate them)."""
+
+    def __init__(self, regions: Sequence[Region], host_port: int = 0,
+                 policy: str = "first_fit"):
+        from repro.shell.shell import Shell      # lazy: avoids import cycle
+        self._shell = Shell(regions, policy=policy, host_port=host_port)
+        self.host_port = host_port
         self.events: List[ReconfigEvent] = []
         self._clock = 0.0
 
     # ------------------------------------------------------------------
-    def _tick(self, dt: float) -> float:
-        self._clock += dt
-        return self._clock
+    def _post(self, event) -> None:
+        plan = self._shell.post(event)
+        for a in plan.actions:
+            self._clock += a.cost_s
+            self.events.append(ReconfigEvent(a.kind, a.tenant, a.module_idx,
+                                             a.region, a.cost_s, self._clock))
 
-    def _log(self, kind: str, tenant: str, module_idx: Optional[int],
-             region: Optional[int], cost_s: float) -> None:
-        self.events.append(ReconfigEvent(kind, tenant, module_idx, region,
-                                         cost_s, self._tick(cost_s)))
+    # ---- materialised legacy views -----------------------------------
+    @property
+    def regions(self) -> Dict[int, Region]:
+        return {r.rid: Region(rid=r.rid, n_chips=r.n_chips,
+                              hbm_bytes=r.hbm_bytes, healthy=r.healthy,
+                              tenant=r.tenant, module_idx=r.module_idx)
+                for r in self._shell.state.regions}
+
+    @property
+    def tenants(self) -> Dict[str, TenantState]:
+        return {t.name: TenantState(name=t.name,
+                                    footprints=list(t.footprints),
+                                    placement=list(t.placement),
+                                    app_id=t.app_id,
+                                    max_regions=t.max_regions)
+                for t in self._shell.state.tenants}
+
+    @property
+    def shell(self):
+        """The underlying event-driven ``repro.shell.Shell`` (migration
+        escape hatch)."""
+        return self._shell
 
     def reconfig_cost_s(self, fp: ModuleFootprint) -> float:
-        return RECONFIG_FIXED_S + fp.param_bytes / HBM_BYTES_PER_S
+        from repro.shell.planner import reconfig_cost_s
+        return reconfig_cost_s(fp)
 
     def free_regions(self) -> List[Region]:
         return [r for r in self.regions.values() if r.free]
 
-    # ------------------------------------------------------------------
+    # ---- legacy verbs -> shell events --------------------------------
     def submit(self, name: str, footprints: Sequence[ModuleFootprint],
                app_id: int = 0) -> List[int]:
         """Admit a tenant; place as many modules as regions allow, rest
         on-server. Returns the placement list."""
-        if name in self.tenants:
-            raise ValueError(f"tenant {name!r} already admitted")
-        st = TenantState(name=name, footprints=list(footprints), app_id=app_id)
-        for i, fp in enumerate(st.footprints):
-            region = next((r for r in self.free_regions()
-                           if fp.fits(r.hbm_bytes)), None)
-            if region is None:
-                st.placement.append(ON_SERVER)
-                self._log("demote", name, i, None, 0.0)
-            else:
-                region.tenant, region.module_idx = name, i
-                st.placement.append(region.rid)
-                self._log("allocate", name, i, region.rid,
-                          self.reconfig_cost_s(fp))
-        self.tenants[name] = st
-        return list(st.placement)
+        from repro.shell.events import Submit
+        self._post(Submit(tenant=name, footprints=tuple(footprints),
+                          app_id=app_id))
+        return self.placement_of(name)
 
     def release(self, name: str) -> None:
         """Tenant done: free its regions and promote waiters (§IV-A)."""
-        st = self.tenants.pop(name)
-        for p in st.placement:
-            if p != ON_SERVER:
-                r = self.regions[p]
-                r.tenant = r.module_idx = None
-        self._log("release", name, None, None, 0.0)
-        self._promote_waiters()
+        from repro.shell.events import Release
+        self._post(Release(tenant=name))
 
     def shrink(self, name: str, n_regions: int) -> List[int]:
         """Reduce a tenant to ``n_regions`` regions (demote the tail modules)."""
-        st = self.tenants[name]
-        st.max_regions = n_regions
-        placed = [i for i, p in enumerate(st.placement) if p != ON_SERVER]
-        for i in placed[n_regions:]:
-            r = self.regions[st.placement[i]]
-            r.tenant = r.module_idx = None
-            st.placement[i] = ON_SERVER
-            self._log("demote", name, i, r.rid, 0.0)
-        self._promote_waiters()
-        return list(st.placement)
+        from repro.shell.events import Shrink
+        self._post(Shrink(tenant=name, n_regions=n_regions))
+        return self.placement_of(name)
 
     def grow(self, name: str, n_regions: Optional[int] = None) -> List[int]:
         """Raise (or remove) a tenant's region cap and promote waiters."""
-        self.tenants[name].max_regions = n_regions
-        self._promote_waiters()
-        return list(self.tenants[name].placement)
+        from repro.shell.events import Grow
+        self._post(Grow(tenant=name, n_regions=n_regions))
+        return self.placement_of(name)
 
     def fail_region(self, rid: int) -> None:
         """Heartbeat lost: demote the hosted module, mark region unhealthy."""
-        r = self.regions[rid]
-        r.healthy = False
-        if r.tenant is not None:
-            st = self.tenants[r.tenant]
-            st.placement[r.module_idx] = ON_SERVER
-            self._log("fail", r.tenant, r.module_idx, rid, 0.0)
-            r.tenant = r.module_idx = None
-            # A failed tenant module may relocate to another free region now.
-            self._promote_waiters()
+        from repro.shell.events import FailRegion
+        self._post(FailRegion(rid=rid))
 
     def heal_region(self, rid: int) -> None:
-        self.regions[rid].healthy = True
-        self._promote_waiters()
-
-    def _promote_waiters(self) -> None:
-        """§IV-A: "the FPGA manager checks again if there are any PR regions
-        released so that it can run the on-server module on the FPGA"."""
-        for name in sorted(self.tenants):       # deterministic FIFO-ish order
-            st = self.tenants[name]
-            for i in st.on_server_modules:
-                if not st.may_grow():
-                    break
-                fp = st.footprints[i]
-                region = next((r for r in self.free_regions()
-                               if fp.fits(r.hbm_bytes)), None)
-                if region is None:
-                    continue
-                region.tenant, region.module_idx = name, i
-                st.placement[i] = region.rid
-                self._log("promote", name, i, region.rid,
-                          self.reconfig_cost_s(fp))
+        from repro.shell.events import HealRegion
+        self._post(HealRegion(rid=rid))
 
     # ------------------------------------------------------------------
     def build_registers(self, capacity: int = 8) -> CrossbarRegisters:
         """Synthesise the crossbar register file for the current placement.
 
-        Ports: 0 = host bridge, 1..N = regions. Isolation: a region may talk
-        only to the host port and to regions of the *same tenant* (§IV-E.2).
-        Destinations: module i points at the region of module i+1, or at the
-        host port if the next module is on-server / the chain ends ("the last
-        module's destination address is sent back to the server").
-        """
-        import jax.numpy as jnp
-        n_ports = len(self.regions) + 1
-        regs = CrossbarRegisters.create(n_ports, n_modules=n_ports,
-                                        capacity=capacity)
-        allowed = jnp.zeros((n_ports, n_ports), dtype=bool)
-        allowed = allowed.at[self.host_port, :].set(True)   # host reaches all
-        allowed = allowed.at[:, self.host_port].set(True)   # all reach host
-        dest = jnp.full((n_ports,), self.host_port, dtype=jnp.int32)
-        for st in self.tenants.values():
-            ports = {i: (self.host_port if p == ON_SERVER else p + 1)
-                     for i, p in enumerate(st.placement)}
-            tenant_ports = [p for p in ports.values() if p != self.host_port]
-            for a in tenant_ports:
-                for b in tenant_ports:
-                    allowed = allowed.at[a, b].set(True)
-            for i, port in ports.items():
-                nxt = ports.get(i + 1, self.host_port)
-                if port != self.host_port:
-                    dest = dest.at[port].set(nxt)
-        regs = regs.write(allowed=allowed, dest=dest)
-        # Reset bits for unhealthy regions: no grants during reconfiguration.
-        reset = jnp.zeros((n_ports,), dtype=bool)
-        for r in self.regions.values():
-            if not r.healthy:
-                reset = reset.at[r.rid + 1].set(True)
-        return regs.write(reset=reset)
+        Full (from-scratch) synthesis for the legacy API; the shell itself
+        maintains a live register file incrementally via delta patches."""
+        from repro.shell.regfile import full_registers
+        return full_registers(self._shell.state, capacity=capacity)
 
     # ------------------------------------------------------------------
     def utilization(self) -> float:
-        live = [r for r in self.regions.values() if r.healthy]
-        used = [r for r in live if r.tenant is not None]
-        return len(used) / max(1, len(live))
+        return self._shell.utilization()
 
     def placement_of(self, name: str) -> List[int]:
-        return list(self.tenants[name].placement)
+        return self._shell.placement_of(name)

@@ -82,6 +82,12 @@ class ModuleChain:
         return x
 
     @property
+    def footprints(self) -> List[ModuleFootprint]:
+        """Per-module placement currency — what ``Shell.submit`` consumes
+        when a chain (rather than a bare footprint list) is admitted."""
+        return [m.footprint for m in self.modules]
+
+    @property
     def total_footprint(self) -> ModuleFootprint:
         return ModuleFootprint(
             param_bytes=sum(m.footprint.param_bytes for m in self.modules),

@@ -79,6 +79,31 @@ class CrossbarRegisters:
         new = dataclasses.replace(self, **updates)
         return dataclasses.replace(new, version=self.version + 1)
 
+    def patch(self, *, dest=(), allowed=(), reset=()) -> "CrossbarRegisters":
+        """Incremental write port: scatter sparse entry updates in one epoch.
+
+        ``dest``:    iterable of ``(port, new_dest)``
+        ``allowed``: iterable of ``(src, dst, value)``
+        ``reset``:   iterable of ``(port, value)``
+
+        The shell's delta register synthesis uses this instead of re-deriving
+        the whole file — a promote/demote rewrites only the touched entries.
+        Bumps ``version`` exactly once (the epoch of the applied plan), even
+        when every update list is empty.
+        """
+        d, a, r = self.dest, self.allowed, self.reset
+        if dest:
+            idx, vals = zip(*dest)
+            d = d.at[jnp.asarray(idx)].set(jnp.asarray(vals, d.dtype))
+        if allowed:
+            src, dst, vals = zip(*allowed)
+            a = a.at[jnp.asarray(src), jnp.asarray(dst)].set(
+                jnp.asarray(vals, a.dtype))
+        if reset:
+            idx, vals = zip(*reset)
+            r = r.at[jnp.asarray(idx)].set(jnp.asarray(vals, r.dtype))
+        return self.write(dest=d, allowed=a, reset=r)
+
     def with_isolation(self, src: int, allowed_dsts) -> "CrossbarRegisters":
         mask = self.allowed.at[src].set(
             jnp.zeros((self.n_ports,), bool).at[jnp.asarray(allowed_dsts)].set(True))

@@ -1,0 +1,10 @@
+"""jax version compatibility shims shared by the Pallas kernels.
+
+jax<0.5 ships TPU compiler options as ``pltpu.TPUCompilerParams``; newer jax
+renames it ``pltpu.CompilerParams``.  Resolve once here so every
+``pl.pallas_call`` site works on both.
+"""
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

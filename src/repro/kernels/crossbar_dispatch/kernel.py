@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core.registers import ErrorCode
 
 
@@ -119,7 +121,7 @@ def plan_call(dst: jax.Array, allowed_row: jax.Array, quota_row: jax.Array,
             jax.ShapeDtypeStruct((1, n_ports), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, n_ports), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(dst.reshape(nb, block_t), allowed_row.reshape(1, -1),
@@ -172,7 +174,7 @@ def scatter_call(x: jax.Array, dst: jax.Array, keep: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, capacity, D), lambda s, i: (s, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_ports, capacity, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dst.reshape(nb, block_t), keep.reshape(nb, block_t),
@@ -225,7 +227,7 @@ def combine_call(y: jax.Array, dst: jax.Array, keep: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_t, D), lambda i, s: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((T, D), y.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(y, dst.reshape(nb, block_t), keep.reshape(nb, block_t),

@@ -12,6 +12,12 @@ runtime keeps exactly that contract at step granularity:
 - ``StragglerStats``  — EWMA of per-region step times; persistent outliers
   (> ``threshold`` x fleet median for ``patience`` consecutive steps) trigger
   region reassignment, the paper's "switch the grant to the next master".
+
+Event wiring: both monitors speak the unified shell vocabulary.  Attach a
+``repro.shell.Shell`` (or pass ``on_timeout`` for the watchdog) and a missed
+heartbeat posts ``HeartbeatLost``, a heal posts ``HealRegion``, and a blown
+step deadline posts ``WatchdogTimeout`` — no example-level polling glue
+needed.  The legacy ``erm=`` arguments remain for the wrapper API.
 """
 from __future__ import annotations
 
@@ -19,8 +25,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core.elastic import ElasticResourceManager
 from repro.core.registers import ErrorCode
+from repro.shell.events import HealRegion, HeartbeatLost, WatchdogTimeout
 
 
 @dataclasses.dataclass
@@ -33,11 +39,20 @@ class WatchdogEvent:
 
 
 class StepWatchdog:
-    """Per-step deadline — the WB watchdog at step granularity."""
+    """Per-step deadline — the WB watchdog at step granularity.
 
-    def __init__(self, deadline_s: float):
+    ``on_timeout`` (or an attached ``shell``) receives every blown deadline;
+    a shell gets it as a ``WatchdogTimeout`` event so demotion happens
+    through the planner, not through caller-side polling of ``events``.
+    """
+
+    def __init__(self, deadline_s: float, *,
+                 on_timeout: Optional[Callable[[WatchdogEvent], None]] = None,
+                 shell=None):
         self.deadline_s = deadline_s
         self.events: List[WatchdogEvent] = []
+        self.on_timeout = on_timeout
+        self.shell = shell
         self._t0: Optional[float] = None
         self._step = -1
 
@@ -51,17 +66,33 @@ class StepWatchdog:
         elapsed = time.monotonic() - self._t0
         ok = elapsed <= self.deadline_s
         if not ok:
-            self.events.append(WatchdogEvent(self._step, region, elapsed,
-                                             self.deadline_s))
+            event = WatchdogEvent(self._step, region, elapsed,
+                                  self.deadline_s)
+            self.events.append(event)
+            if self.on_timeout is not None:
+                self.on_timeout(event)
+            if self.shell is not None:
+                self.shell.post(WatchdogTimeout(
+                    step=event.step, region=event.region,
+                    elapsed_s=event.elapsed_s,
+                    deadline_s=event.deadline_s))
         return ok
 
 
 class HeartbeatMonitor:
-    """Region liveness; integrates with the ERM's fail/heal path."""
+    """Region liveness; emits shell events (or drives the legacy ERM).
+
+    Attach a ``repro.shell.Shell`` and every stale heartbeat posts a
+    ``HeartbeatLost`` event (the planner demotes the region's module), every
+    heal posts ``HealRegion`` (the planner promotes waiters).  The ``erm=``
+    arguments keep the seed's polled integration working.
+    """
 
     def __init__(self, region_ids: List[int], timeout_s: float = 30.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, *,
+                 shell=None):
         self.timeout_s = timeout_s
+        self.shell = shell
         self._clock = clock
         now = clock()
         self.last_beat: Dict[int, float] = {r: now for r in region_ids}
@@ -72,9 +103,8 @@ class HeartbeatMonitor:
         if region in self.failed:
             del self.failed[region]
 
-    def sweep(self, erm: Optional[ElasticResourceManager] = None
-              ) -> List[int]:
-        """Mark regions with stale heartbeats failed; demote via ERM."""
+    def sweep(self, erm=None) -> List[int]:
+        """Mark regions with stale heartbeats failed; emit events/demote."""
         now = self._clock()
         newly_failed = []
         for region, t in self.last_beat.items():
@@ -85,13 +115,17 @@ class HeartbeatMonitor:
                 newly_failed.append(region)
                 if erm is not None:
                     erm.fail_region(region)
+                if self.shell is not None:
+                    self.shell.post(HeartbeatLost(rid=region,
+                                                  stale_s=now - t))
         return newly_failed
 
-    def heal(self, region: int,
-             erm: Optional[ElasticResourceManager] = None) -> None:
+    def heal(self, region: int, erm=None) -> None:
         self.beat(region)
         if erm is not None:
             erm.heal_region(region)
+        if self.shell is not None:
+            self.shell.post(HealRegion(rid=region))
 
 
 class StragglerStats:

@@ -3,8 +3,13 @@
 The request path mirrors the paper's AXI->WB ingress: requests arrive tagged
 with an application ID, the register file's app-destination registers say
 which module chain serves them (here: which model), and results stream back
-round-robin (§IV-G). Batched continuous decode keeps one decode-state pytree
-alive and rotates finished slots to new requests.
+round-robin (§IV-G).
+
+``ServeLoop`` is the fixed-wave engine: it serves one padded batch of
+requests to completion before accepting the next wave.  The event-driven
+path — admission queue, continuous batching, shell-routed multi-tenant
+streams — lives in ``repro.shell.server.ElasticServer``, which builds on the
+same model/decode machinery via ``extra_decode_inputs``.
 """
 from __future__ import annotations
 
@@ -33,6 +38,30 @@ class Completion:
     tokens: List[int]
     prefill_s: float
     decode_s: float
+
+
+def greedy_tokens(logits: jax.Array, vocab: int) -> jax.Array:
+    """Greedy next-token over the true vocab (masks the padded tail).
+
+    Shared by the fixed-wave ``ServeLoop`` and the shell's ``ElasticServer``.
+    """
+    masked = jnp.where(jnp.arange(logits.shape[-1]) < vocab,
+                       logits, -jnp.inf)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+def extra_decode_inputs(cfg: ModelConfig, batch_size: int,
+                        dtype) -> Dict[str, jax.Array]:
+    """Per-family auxiliary decode inputs (vision patches, encoder frames).
+
+    Shared by the fixed-wave ``ServeLoop`` and the shell's ``ElasticServer``
+    so new model families plug into both paths in one place.
+    """
+    extras: Dict[str, jax.Array] = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.zeros(
+            (batch_size, cfg.encoder_len, cfg.d_model), dtype)
+    return extras
 
 
 class ServeLoop:
@@ -76,12 +105,9 @@ class ServeLoop:
         B, S = prompts.shape
         state = self.model.init_decode_state(B, self.max_len)
         logits = None
+        extras = extra_decode_inputs(self.cfg, B, self.model.dtype)
         for t in range(S):
-            batch = {"tokens": jnp.asarray(prompts[:, t:t + 1])}
-            if self.cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (B, self.cfg.encoder_len, self.cfg.d_model),
-                    self.model.dtype)
+            batch = {"tokens": jnp.asarray(prompts[:, t:t + 1]), **extras}
             logits, state = self._decode(self.params, state, batch)
         return logits, state
 
@@ -101,18 +127,13 @@ class ServeLoop:
         max_new = max(r.max_new for r in requests)
         out_tokens = np.zeros((self.batch, max_new), np.int32)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        extras = extra_decode_inputs(self.cfg, self.batch, self.model.dtype)
         for j in range(max_new):
             # Mask the vocab padding (argmax over true vocab only).
             out_tokens[:, j] = np.asarray(tok)
-            batch = {"tokens": tok[:, None]}
-            if self.cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (self.batch, self.cfg.encoder_len, self.cfg.d_model),
-                    self.model.dtype)
+            batch = {"tokens": tok[:, None], **extras}
             logits, state = self._decode(self.params, state, batch)
-            tok = jnp.argmax(
-                jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab,
-                          logits, -jnp.inf), axis=-1).astype(jnp.int32)
+            tok = greedy_tokens(logits, self.cfg.vocab)
         t2 = time.monotonic()
 
         return [Completion(app_id=r.app_id,

@@ -44,13 +44,18 @@ class TrainLoop:
     def __init__(self, cfg: ModelConfig, run: TrainLoopConfig,
                  ckpt_dir: Optional[Path] = None, *,
                  resume: bool = False,
-                 on_log: Optional[Callable[[Dict[str, Any]], None]] = None):
+                 on_log: Optional[Callable[[Dict[str, Any]], None]] = None,
+                 shell=None):
         self.cfg = cfg
         self.run = run
         self.model = build_model(cfg)
         self.opt = AdamW(lr=cosine_schedule(run.lr, run.warmup, run.steps))
         self.on_log = on_log or (lambda rec: None)
-        self.watchdog = StepWatchdog(run.step_deadline_s)
+        # With a repro.shell.Shell attached, blown step deadlines surface as
+        # WatchdogTimeout events on the shell's bus instead of requiring the
+        # caller to poll ``watchdog.events``.
+        self.shell = shell
+        self.watchdog = StepWatchdog(run.step_deadline_s, shell=shell)
         self.ckpt = (CheckpointManager(ckpt_dir, keep=run.ckpt_keep)
                      if ckpt_dir is not None else None)
         self.history: List[Dict[str, Any]] = []

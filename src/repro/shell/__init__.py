@@ -1,0 +1,56 @@
+"""``repro.shell`` — the unified, event-driven shell API.
+
+The paper's shell (resource manager + register file + interconnect reacting
+to reconfiguration events) as one coherent package:
+
+- ``repro.shell.state``   — immutable ``PoolState`` the planner folds over
+- ``repro.shell.events``  — the event taxonomy (tenant lifecycle + FT)
+- ``repro.shell.planner`` — pure ``plan(state, event) -> (state, Plan)``
+- ``repro.shell.policy``  — pluggable placement policies
+  (``first_fit`` / ``best_fit`` / ``defrag``)
+- ``repro.shell.regfile`` — full + delta register synthesis
+- ``repro.shell.shell``   — the stateful ``Shell`` facade (``post`` seam)
+- ``repro.shell.server``  — ``ElasticServer``, continuous-batching serving
+
+Legacy entry points (``repro.core.elastic.ElasticResourceManager``,
+``repro.runtime.serve.ServeLoop``) remain importable as thin wrappers /
+fixed-wave engines; new scaling work should target this package.
+"""
+from repro.shell.events import (Event, FailRegion, Grow, HealRegion,
+                                HeartbeatLost, Release, Shrink, Submit,
+                                WatchdogTimeout)
+from repro.shell.planner import Action, Plan, plan, reconfig_cost_s, replay
+from repro.shell.policy import (BestFit, Defrag, FirstFit, PlacementPolicy,
+                                get_policy, register_policy)
+from repro.shell.regfile import (RegisterDelta, apply_delta, compute_delta,
+                                 full_registers, registers_content_equal)
+from repro.shell.shell import LogEntry, Shell
+from repro.shell.state import (ON_SERVER, PoolState, RegionState, TenantEntry,
+                               check_invariants)
+
+__all__ = [
+    "Shell", "LogEntry",
+    "Event", "Submit", "Release", "Shrink", "Grow",
+    "FailRegion", "HealRegion", "HeartbeatLost", "WatchdogTimeout",
+    "plan", "replay", "Plan", "Action", "reconfig_cost_s",
+    "PlacementPolicy", "FirstFit", "BestFit", "Defrag",
+    "get_policy", "register_policy",
+    "RegisterDelta", "full_registers", "compute_delta", "apply_delta",
+    "registers_content_equal",
+    "PoolState", "RegionState", "TenantEntry", "ON_SERVER",
+    "check_invariants",
+    # lazily resolved (pulls model machinery): ElasticServer & friends
+    "ElasticServer", "ModelEngine", "StreamRequest", "StreamCompletion",
+]
+
+_SERVER_NAMES = {"ElasticServer", "ModelEngine", "StreamRequest",
+                 "StreamCompletion"}
+
+
+def __getattr__(name):
+    # PEP 562: keep `import repro.shell` light — the serving data plane
+    # (models, jit machinery) loads only when actually used.
+    if name in _SERVER_NAMES:
+        from repro.shell import server
+        return getattr(server, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

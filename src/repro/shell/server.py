@@ -1,0 +1,226 @@
+"""``ElasticServer`` — continuous-batching, shell-routed elastic serving.
+
+The seed ``ServeLoop.serve`` was wave-based: it padded a fixed batch, decoded
+every request to the longest ``max_new``, and only then accepted more work.
+This server replaces the wave with an **admission queue + slot rotation**:
+
+- requests enter via ``submit`` and wait in an admission queue;
+- the server keeps ``n_slots`` concurrent decode slots, each with its own
+  B=1 decode state (``DecodeState.pos`` is a scalar, so slots at different
+  sequence positions cannot share one batched cache);
+- every ``step()`` first admits queued requests into free slots (prefill),
+  then advances each active slot by one token — so new requests start
+  decoding *while* earlier ones are mid-stream, and a finished slot is
+  reused on the very next tick (continuous batching);
+- admission is **routed through the shell**: a request's ``app_id`` must map
+  to an admitted tenant, and the completion records the ingress port the
+  live register file assigned (a region port, or the host port when the
+  tenant's chain starts on-server).  Unknown apps stay queued until a
+  ``Submit`` event lands — the control plane gates the data plane.
+
+Engines are pluggable: ``register_model`` builds a real jitted model engine;
+tests inject lightweight fakes via ``register_engine`` (anything with
+``prefill(prompt) -> (tok, state)`` and ``decode(tok, state) ->
+(next_tok, state)``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.shell.shell import Shell
+
+
+@dataclasses.dataclass
+class StreamRequest:
+    """One generation request in a tenant's stream."""
+
+    app_id: int
+    prompt: np.ndarray                  # [S] int32
+    max_new: int = 16
+    rid: int = -1                       # assigned by the server at submit
+
+
+@dataclasses.dataclass
+class StreamCompletion:
+    rid: int
+    app_id: int
+    tokens: List[int]
+    entry_port: int                     # shell route at admission time
+    admitted_tick: int
+    finished_tick: int
+
+
+class ModelEngine:
+    """B=1 greedy-decode engine over a repro model (prefill by replay)."""
+
+    def __init__(self, cfg, *, max_len: int = 128, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.lm import build_model
+        from repro.runtime.serve import extra_decode_inputs
+
+        self.cfg = cfg
+        self.max_len = max_len
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.key(seed))
+        self._extras = extra_decode_inputs(cfg, 1, self.model.dtype)
+        self._jnp = jnp
+
+        def decode_one(params, state, batch_):
+            return self.model.decode_step(params, state, batch_)
+
+        self._decode_fn = jax.jit(decode_one)
+
+    def _greedy(self, logits):
+        from repro.runtime.serve import greedy_tokens
+        return int(greedy_tokens(logits, self.cfg.vocab)[0])
+
+    def prefill(self, prompt: np.ndarray) -> Tuple[int, Any]:
+        """Replay the prompt through decode_step; return (first_tok, state)."""
+        jnp = self._jnp
+        state = self.model.init_decode_state(1, self.max_len)
+        logits = None
+        for t in range(len(prompt)):
+            batch = {"tokens": jnp.asarray(prompt[None, t:t + 1]),
+                     **self._extras}
+            logits, state = self._decode_fn(self.params, state, batch)
+        return self._greedy(logits), state
+
+    def decode(self, tok: int, state: Any) -> Tuple[int, Any]:
+        jnp = self._jnp
+        batch = {"tokens": jnp.asarray([[tok]], dtype=jnp.int32),
+                 **self._extras}
+        logits, state = self._decode_fn(self.params, state, batch)
+        return self._greedy(logits), state
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: StreamRequest
+    entry_port: int
+    admitted_tick: int
+    state: Any
+    next_tok: int
+    produced: List[int] = dataclasses.field(default_factory=list)
+
+
+class ElasticServer:
+    """Admission queue + ``n_slots`` rotating decode slots over a ``Shell``."""
+
+    def __init__(self, shell: Shell, *, n_slots: int = 4):
+        self.shell = shell
+        self.n_slots = n_slots
+        self.queue: Deque[StreamRequest] = collections.deque()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.completions: List[StreamCompletion] = []
+        self.tick = 0
+        self._engines: Dict[int, Any] = {}
+        self._rid_counter = itertools.count()
+        self._stalled = False
+
+    # ---- engines ------------------------------------------------------
+    def register_model(self, app_id: int, cfg, *, max_len: int = 128,
+                       seed: int = 0) -> None:
+        self._engines[app_id] = ModelEngine(cfg, max_len=max_len, seed=seed)
+
+    def register_engine(self, app_id: int, engine: Any) -> None:
+        """Duck-typed engine injection (tests, host-path fallbacks)."""
+        self._engines[app_id] = engine
+
+    # ---- request path -------------------------------------------------
+    def submit(self, request: StreamRequest) -> int:
+        """Enqueue a request; returns its server-assigned request id."""
+        if request.app_id not in self._engines:
+            raise KeyError(f"no engine registered for app {request.app_id}")
+        request.rid = next(self._rid_counter)
+        self.queue.append(request)
+        return request.rid
+
+    @property
+    def active_count(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    @property
+    def queued_count(self) -> int:
+        return len(self.queue)
+
+    @property
+    def idle(self) -> bool:
+        return self.active_count == 0 and not self.queue
+
+    # ---- the server tick ----------------------------------------------
+    def _admit(self) -> int:
+        """Fill free slots from the queue; shell-gated. Returns admissions."""
+        admitted = 0
+        blocked: List[StreamRequest] = []
+        for i, slot in enumerate(self.slots):
+            if slot is not None:
+                continue
+            req = None
+            while self.queue:
+                cand = self.queue.popleft()
+                port = self.shell.route(cand.app_id)
+                if port is None:
+                    # Tenant not admitted to the shell (yet): park it and
+                    # try the next request — the control plane gates entry.
+                    blocked.append(cand)
+                    continue
+                req = cand
+                break
+            if req is None:
+                break
+            tok, state = self._engines[req.app_id].prefill(req.prompt)
+            self.slots[i] = _Slot(request=req, entry_port=port,
+                                  admitted_tick=self.tick, state=state,
+                                  next_tok=tok)
+            admitted += 1
+        self.queue.extendleft(reversed(blocked))
+        return admitted
+
+    def step(self) -> List[StreamCompletion]:
+        """One server tick: admit, then one decode token per active slot."""
+        admitted = self._admit()
+        # A stall means this tick had nothing to do AND nothing could enter:
+        # every queued request is waiting on a control-plane event.  Slots
+        # that free at the end of this tick don't count — the next tick's
+        # admission pass gets first claim on them.
+        self._stalled = (admitted == 0 and self.active_count == 0
+                         and bool(self.queue))
+        finished: List[StreamCompletion] = []
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            slot.produced.append(slot.next_tok)
+            if len(slot.produced) >= slot.request.max_new:
+                comp = StreamCompletion(
+                    rid=slot.request.rid, app_id=slot.request.app_id,
+                    tokens=list(slot.produced), entry_port=slot.entry_port,
+                    admitted_tick=slot.admitted_tick,
+                    finished_tick=self.tick)
+                self.completions.append(comp)
+                finished.append(comp)
+                self.slots[i] = None            # rotate: free on completion
+                continue
+            engine = self._engines[slot.request.app_id]
+            slot.next_tok, slot.state = engine.decode(slot.next_tok,
+                                                      slot.state)
+        self.tick += 1
+        return finished
+
+    def run(self, *, max_ticks: int = 10_000) -> List[StreamCompletion]:
+        """Step until queue and slots drain, or until admission stalls
+        (every queued app unrouted — those requests wait for a control-plane
+        ``Submit`` and a later ``run()``)."""
+        start = len(self.completions)
+        for _ in range(max_ticks):
+            if self.idle:
+                break
+            self.step()
+            if self._stalled:
+                break
+        return self.completions[start:]

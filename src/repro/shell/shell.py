@@ -1,0 +1,151 @@
+"""``Shell`` — the unified, event-driven facade over the elastic control plane.
+
+One object owns the three things the paper's shell owns — the region pool,
+the crossbar register file, and the reconfiguration log — and exposes exactly
+one mutation entry point:
+
+    shell = Shell(regions, policy="best_fit")
+    plan = shell.post(Submit("tenant_a", footprints, app_id=0))
+
+``post`` runs the pure planner, swaps the immutable ``PoolState``, patches
+the live register file *incrementally* (delta synthesis; the epoch counts
+applied plans), appends to the event log, and fans the plan out to
+subscribers.  Everything else — the legacy ``ElasticResourceManager``, the
+fault-tolerance monitors, the ``ElasticServer`` data plane — is a client of
+this seam.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Union
+
+from repro.core.module import ModuleFootprint
+from repro.core.registers import CrossbarRegisters
+from repro.shell import events as ev
+from repro.shell.planner import Plan, plan as plan_event, reconfig_cost_s
+from repro.shell.policy import PlacementPolicy, get_policy
+from repro.shell.regfile import (apply_delta, full_registers,
+                                 registers_content_equal)
+from repro.shell.state import ON_SERVER, PoolState, check_invariants
+
+Subscriber = Callable[[ev.Event, Plan], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogEntry:
+    """One applied event: what was posted, what the planner did, when."""
+
+    event: ev.Event
+    plan: Plan
+    wall_time: float            # cost-model clock after applying the plan
+    epoch: int                  # register-file epoch after applying
+
+
+class Shell:
+    """Region pool + register file + event log behind one ``post`` seam."""
+
+    def __init__(self, regions: Union[PoolState, Sequence], *,
+                 policy: Union[str, PlacementPolicy] = "first_fit",
+                 host_port: int = 0, capacity: int = 8):
+        if isinstance(regions, PoolState):
+            self._state = regions
+        else:
+            self._state = PoolState.create(regions, host_port=host_port)
+        self.policy = get_policy(policy)
+        self.capacity = capacity
+        self._regs = full_registers(self._state, capacity=capacity, version=0)
+        self.log: List[LogEntry] = []
+        self._clock = 0.0
+        self._subscribers: List[Subscriber] = []
+
+    # ---- the seam -----------------------------------------------------
+    def post(self, event: ev.Event) -> Plan:
+        """Apply one event: plan purely, swap state, patch registers."""
+        new_state, p = plan_event(self._state, event, self.policy)
+        self._state = new_state
+        self._regs = apply_delta(self._regs, p.delta)
+        self._clock += p.cost_s
+        self.log.append(LogEntry(event=event, plan=p,
+                                 wall_time=self._clock, epoch=self.epoch))
+        for fn in list(self._subscribers):
+            fn(event, p)
+        return p
+
+    def subscribe(self, fn: Subscriber) -> Callable[[], None]:
+        """Register a plan observer; returns an unsubscribe thunk."""
+        self._subscribers.append(fn)
+        return lambda: self._subscribers.remove(fn)
+
+    # ---- views --------------------------------------------------------
+    @property
+    def state(self) -> PoolState:
+        return self._state
+
+    @property
+    def registers(self) -> CrossbarRegisters:
+        """The live, delta-maintained register file."""
+        return self._regs
+
+    @property
+    def epoch(self) -> int:
+        """Monotonic count of applied plans (== registers.version)."""
+        return int(self._regs.version)
+
+    @property
+    def clock_s(self) -> float:
+        """Cost-model wall clock (sum of applied reconfiguration costs)."""
+        return self._clock
+
+    def placement_of(self, name: str) -> List[int]:
+        return list(self._state.tenant(name).placement)
+
+    def utilization(self) -> float:
+        return self._state.utilization()
+
+    def reconfig_cost_s(self, fp: ModuleFootprint) -> float:
+        return reconfig_cost_s(fp)
+
+    # ---- data-plane routing ------------------------------------------
+    def route(self, app_id: int) -> Optional[int]:
+        """Ingress port for an application id, read off the live placement:
+        the first module's region port, or the host port when the chain
+        starts on-server.  ``None`` when no tenant owns ``app_id`` (the
+        server keeps such requests queued until a ``Submit`` lands)."""
+        t = self._state.tenant_by_app(app_id)
+        if t is None:
+            return None
+        if not t.placement or t.placement[0] == ON_SERVER:
+            return self._state.host_port
+        return t.placement[0] + 1
+
+    # ---- convenience verbs (thin wrappers over post) ------------------
+    def submit(self, name: str, footprints, app_id: int = 0) -> List[int]:
+        fps = getattr(footprints, "footprints", footprints)
+        self.post(ev.Submit(tenant=name, footprints=tuple(fps),
+                            app_id=app_id))
+        return self.placement_of(name)
+
+    def release(self, name: str) -> None:
+        self.post(ev.Release(tenant=name))
+
+    def shrink(self, name: str, n_regions: int) -> List[int]:
+        self.post(ev.Shrink(tenant=name, n_regions=n_regions))
+        return self.placement_of(name)
+
+    def grow(self, name: str, n_regions: Optional[int] = None) -> List[int]:
+        self.post(ev.Grow(tenant=name, n_regions=n_regions))
+        return self.placement_of(name)
+
+    def fail_region(self, rid: int) -> None:
+        self.post(ev.FailRegion(rid=rid))
+
+    def heal_region(self, rid: int) -> None:
+        self.post(ev.HealRegion(rid=rid))
+
+    # ---- self-checks --------------------------------------------------
+    def verify(self) -> None:
+        """Assert pool invariants and delta-vs-full register equivalence."""
+        check_invariants(self._state)
+        oracle = full_registers(self._state, capacity=self.capacity)
+        assert registers_content_equal(self._regs, oracle), \
+            "delta-synthesised registers diverged from full rebuild"

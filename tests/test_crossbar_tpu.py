@@ -5,6 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# jax<0.5 ships shard_map under jax.experimental; newer jax exposes it as
+# jax.shard_map.  Resolve once so the mesh tests run on both.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
+
 from repro.core.arbiter import combine, dispatch, wrr_dispatch_plan
 from repro.core.crossbar import (CrossbarInterconnect, combine_local,
                                  exchange_local, pairwise_dispatch_plan)
@@ -85,7 +91,7 @@ class TestShardedExchange:
         x = jnp.arange(n * Tloc * D, dtype=jnp.float32).reshape(n * Tloc, D)
         dst_global = (jnp.repeat(jnp.arange(n), Tloc) + 1) % n
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(P("region"), P("region")),
                  out_specs=(P("region"), P("region")))
         def run(xs, ds):
@@ -120,7 +126,7 @@ class TestShardedExchange:
         dst = jnp.where(jnp.arange(n * Tloc) < Tloc, 3,
                         (jnp.repeat(jnp.arange(n), Tloc) + 1) % n)
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(P("region"), P("region")),
                  out_specs=P("region"))
         def run(xs, ds):

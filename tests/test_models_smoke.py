@@ -13,6 +13,8 @@ from repro.models.config import ShapeConfig, shapes_for, skipped_shapes_for
 from repro.models.lm import build_model
 from repro.optim.adamw import AdamW
 
+pytestmark = pytest.mark.slow       # heavyweight: full per-arch smoke matrix
+
 
 def tiny_batch(model, cfg, B=2, S=64, kind="train", seed=0):
     shape = ShapeConfig("tiny", S, B, kind)

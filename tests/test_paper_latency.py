@@ -1,6 +1,8 @@
 """§V-E / Fig 6: the cycle-level crossbar reproduces the paper's latencies."""
 import pytest
 
+pytestmark = pytest.mark.slow       # heavyweight: cycle-level sweeps
+
 from repro.core.hw.crossbar import (CrossbarSim, ErrorCode, MasterRequest,
                                     best_case_time_to_grant,
                                     request_completion_cc,

@@ -1,0 +1,478 @@
+"""repro.shell: pure planning, pluggable policies, delta register synthesis,
+event-driven FT wiring, and continuous-batching elastic serving.
+
+Property-style coverage runs on plain numpy RNG loops (no hypothesis
+dependency) so it executes everywhere the tier-1 suite does:
+
+- any event sequence keeps ``PoolState`` invariants (no double-booked
+  region, placements only on healthy regions or ON_SERVER);
+- delta register synthesis is content-identical to a full rebuild after
+  every event, for randomized sequences and for every built-in policy.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.elastic import ElasticResourceManager, Region
+from repro.core.module import ModuleFootprint
+from repro.core.registers import CrossbarRegisters, validate_registers
+from repro.shell import (ON_SERVER, BestFit, Defrag, FailRegion, FirstFit,
+                         Grow, HealRegion, HeartbeatLost, PoolState, Release,
+                         Shell, Shrink, Submit, WatchdogTimeout,
+                         check_invariants, full_registers, get_policy, plan,
+                         registers_content_equal, replay)
+from repro.shell.server import ElasticServer, StreamRequest
+
+GB = 1 << 30
+
+
+def fp(param_gb=1):
+    return ModuleFootprint(param_bytes=param_gb * GB, flops_per_token=1e9,
+                           activation_bytes_per_token=4096)
+
+
+def make_regions(n=4, hbm=16 * GB):
+    return [Region(rid=i, n_chips=16, hbm_bytes=hbm) for i in range(n)]
+
+
+def make_shell(n=4, hbm=16 * GB, **kw):
+    return Shell(make_regions(n, hbm), **kw)
+
+
+# ----------------------------------------------------------------------
+# the acceptance script: submit -> shrink -> fail -> heal -> release
+# ----------------------------------------------------------------------
+class TestScriptedLifecycle:
+    EVENTS = [
+        Submit(tenant="a", footprints=(fp(4), fp(4), fp(4)), app_id=0),
+        Submit(tenant="b", footprints=(fp(2), fp(2)), app_id=1),
+        Shrink(tenant="a", n_regions=2),
+        FailRegion(rid=2),
+        HealRegion(rid=2),
+        Release(tenant="a"),
+    ]
+
+    @pytest.mark.parametrize("policy", ["first_fit", "best_fit", "defrag"])
+    def test_invariants_and_delta_equivalence_at_every_step(self, policy):
+        shell = make_shell(policy=policy)
+        for event in self.EVENTS:
+            shell.post(event)
+            shell.verify()         # invariants + delta == full rebuild
+            validate_registers(shell.registers)
+
+    def test_lifecycle_placements(self):
+        shell = make_shell()
+        shell.post(self.EVENTS[0])
+        assert shell.placement_of("a") == [0, 1, 2]
+        shell.post(self.EVENTS[1])
+        # b gets the last region, spills one module on-server
+        assert shell.placement_of("b") == [3, ON_SERVER]
+        shell.post(self.EVENTS[2])                  # a shrinks to 2
+        assert shell.placement_of("a").count(ON_SERVER) == 1
+        assert ON_SERVER not in shell.placement_of("b")   # promoted
+        shell.post(self.EVENTS[3])                  # region 2 fails
+        assert 2 not in shell.placement_of("a") + shell.placement_of("b")
+        assert bool(shell.registers.reset[3])       # port of region 2
+        shell.post(self.EVENTS[4])                  # heal
+        assert not bool(shell.registers.reset[3])
+        shell.post(self.EVENTS[5])                  # a leaves
+        assert shell.state.find_tenant("a") is None
+        assert shell.utilization() == pytest.approx(2 / 4)
+
+    def test_epoch_counts_applied_plans(self):
+        shell = make_shell()
+        for i, event in enumerate(self.EVENTS):
+            shell.post(event)
+            assert shell.epoch == i + 1
+        assert int(shell.registers.version) == len(self.EVENTS)
+
+    def test_legacy_erm_matches_shell_for_same_script(self):
+        """Old API importable, same placements, same register content."""
+        shell = make_shell()
+        erm = ElasticResourceManager(make_regions())
+        erm.submit("a", [fp(4), fp(4), fp(4)], app_id=0)
+        erm.submit("b", [fp(2), fp(2)], app_id=1)
+        erm.shrink("a", 2)
+        erm.fail_region(2)
+        erm.heal_region(2)
+        erm.release("a")
+        for event in self.EVENTS:
+            shell.post(event)
+        assert erm.placement_of("b") == shell.placement_of("b")
+        assert registers_content_equal(erm.build_registers(),
+                                       shell.registers)
+
+    def test_subscribers_see_every_plan(self):
+        shell = make_shell()
+        seen = []
+        unsubscribe = shell.subscribe(lambda e, p: seen.append((e, p)))
+        for event in self.EVENTS[:3]:
+            shell.post(event)
+        assert [e for e, _ in seen] == self.EVENTS[:3]
+        unsubscribe()
+        shell.post(self.EVENTS[3])
+        assert len(seen) == 3
+
+
+# ----------------------------------------------------------------------
+# pure planner
+# ----------------------------------------------------------------------
+class TestPurePlanning:
+    def test_plan_does_not_mutate_input_state(self):
+        state = PoolState.create(make_regions())
+        before = state
+        new_state, p = plan(state, Submit(tenant="a",
+                                          footprints=(fp(), fp())))
+        assert state is before and state == before
+        assert new_state is not state
+        assert [a.kind for a in p.actions] == ["allocate", "allocate"]
+
+    def test_plan_is_deterministic(self):
+        state = PoolState.create(make_regions())
+        a = replay(state, TestScriptedLifecycle.EVENTS)
+        b = replay(state, TestScriptedLifecycle.EVENTS)
+        assert a[0] == b[0]
+        assert [p.actions for p in a[1]] == [p.actions for p in b[1]]
+
+    def test_duplicate_submit_raises(self):
+        state = PoolState.create(make_regions())
+        state, _ = plan(state, Submit(tenant="a", footprints=(fp(),)))
+        with pytest.raises(ValueError):
+            plan(state, Submit(tenant="a", footprints=(fp(),)))
+
+    def test_unknown_tenant_raises_keyerror(self):
+        state = PoolState.create(make_regions())
+        with pytest.raises(KeyError):
+            plan(state, Release(tenant="ghost"))
+
+    def test_spill_distinct_from_demote(self):
+        """Satellite: unplaceable-at-admission is 'spill', not 'demote'."""
+        state = PoolState.create(make_regions(n=1))
+        state, p = plan(state, Submit(tenant="a", footprints=(fp(), fp())))
+        assert [a.kind for a in p.actions] == ["allocate", "spill"]
+        state, p = plan(state, Shrink(tenant="a", n_regions=0))
+        assert "demote" in [a.kind for a in p.actions]
+        assert "spill" not in [a.kind for a in p.actions]
+
+    def test_erm_logs_spill_kind(self):
+        erm = ElasticResourceManager(make_regions(n=1))
+        erm.submit("a", [fp(), fp()])
+        kinds = [e.kind for e in erm.events]
+        assert kinds == ["allocate", "spill"]
+
+    def test_watchdog_timeout_without_region_is_noop(self):
+        state = PoolState.create(make_regions())
+        state, _ = plan(state, Submit(tenant="a", footprints=(fp(),)))
+        new_state, p = plan(state, WatchdogTimeout(step=7))
+        assert new_state == state and p.actions == ()
+        assert p.delta.empty
+
+    def test_watchdog_timeout_with_region_demotes(self):
+        state = PoolState.create(make_regions())
+        state, _ = plan(state, Submit(tenant="a", footprints=(fp(),)))
+        state, p = plan(state, WatchdogTimeout(step=7, region=0))
+        assert [a.kind for a in p.actions] == ["fail", "promote"]
+        assert not state.region(0).healthy
+
+
+# ----------------------------------------------------------------------
+# placement policies
+# ----------------------------------------------------------------------
+class TestPolicies:
+    def mixed_pool(self):
+        """Regions of different sizes: 16, 4, 8, 16 GB."""
+        sizes = [16, 4, 8, 16]
+        return [Region(rid=i, n_chips=16, hbm_bytes=s * GB)
+                for i, s in enumerate(sizes)]
+
+    def test_first_fit_takes_lowest_rid(self):
+        shell = Shell(self.mixed_pool(), policy="first_fit")
+        assert shell.submit("a", [fp(2)]) == [0]
+
+    def test_best_fit_takes_tightest_region(self):
+        shell = Shell(self.mixed_pool(), policy="best_fit")
+        # 2 GB module fits 4 GB region best (reserve fraction 20%).
+        assert shell.submit("a", [fp(2)]) == [1]
+        # 6 GB module: needs > 7.5 GB; the 8 GB region is tightest.
+        assert shell.submit("b", [fp(6)]) == [2]
+
+    def test_best_fit_keeps_big_region_open(self):
+        shell = Shell(self.mixed_pool(), policy="best_fit")
+        shell.submit("small", [fp(2)])
+        placement = shell.submit("big", [fp(12)])
+        assert placement != [ON_SERVER]     # big module still placeable
+        ff = Shell(self.mixed_pool(), policy="first_fit")
+        ff.submit("small", [fp(2)])         # first-fit burns region 0
+        assert ff.submit("big", [fp(12)]) == [3]
+
+    def test_defrag_compacts_after_release(self):
+        shell = Shell(make_regions(4), policy="defrag")
+        shell.submit("a", [fp(), fp()])
+        shell.submit("b", [fp()])
+        shell.release("a")                  # frees rids 0, 1
+        # b's module (was rid 2) migrates down to rid 0.
+        assert shell.placement_of("b") == [0]
+        kinds = [a.kind for a in shell.log[-1].plan.actions]
+        assert "migrate" in kinds
+        shell.verify()
+
+    def test_policy_registry(self):
+        assert isinstance(get_policy("first_fit"), FirstFit)
+        assert isinstance(get_policy("best_fit"), BestFit)
+        assert isinstance(get_policy("defrag"), Defrag)
+        inst = BestFit()
+        assert get_policy(inst) is inst
+        with pytest.raises(ValueError):
+            get_policy("worst_fit")
+
+
+# ----------------------------------------------------------------------
+# delta register synthesis
+# ----------------------------------------------------------------------
+class TestDeltaSynthesis:
+    def test_patch_scatter_matches_manual_writes(self):
+        regs = CrossbarRegisters.create(4)
+        patched = regs.patch(dest=[(1, 2), (3, 0)],
+                             allowed=[(1, 2, False), (2, 1, False)],
+                             reset=[(3, True)])
+        assert int(patched.dest[1]) == 2 and int(patched.dest[3]) == 0
+        assert not bool(patched.allowed[1, 2])
+        assert not bool(patched.allowed[2, 1])
+        assert bool(patched.reset[3])
+        assert int(patched.version) == int(regs.version) + 1
+
+    def test_empty_patch_still_bumps_epoch(self):
+        regs = CrossbarRegisters.create(4)
+        assert int(regs.patch().version) == int(regs.version) + 1
+
+    def test_promote_delta_is_sparse(self):
+        """A single promote touches a handful of entries, not O(ports^2)."""
+        shell = make_shell(n=8)
+        shell.submit("a", [fp()] * 8)
+        shell.submit("b", [fp()])               # spills on-server
+        shell.post(Shrink(tenant="a", n_regions=7))
+        delta = shell.log[-1].plan.delta
+        n = shell.state.n_ports
+        assert delta.n_entries < n * n          # sparse vs 81-entry rebuild
+        # touched: a's ports (old+new) + b's new port
+        assert delta.touched_ports
+        shell.verify()
+
+    def test_randomized_sequences_keep_invariants_and_delta_equivalence(self):
+        """Property-style: random event soup, every policy, every step."""
+        for policy in ("first_fit", "best_fit", "defrag"):
+            for seed in range(6):
+                rng = np.random.default_rng(seed)
+                n_regions = int(rng.integers(2, 6))
+                shell = make_shell(n=n_regions, policy=policy)
+                admitted = []
+                for step in range(25):
+                    op = int(rng.integers(0, 6))
+                    try:
+                        if op == 0:
+                            name = f"t{len(shell.log)}"
+                            mods = int(rng.integers(1, 4))
+                            shell.submit(name, [fp() for _ in range(mods)],
+                                         app_id=len(admitted))
+                            admitted.append(name)
+                        elif op == 1 and admitted:
+                            shell.release(admitted.pop(
+                                int(rng.integers(0, len(admitted)))))
+                        elif op == 2 and admitted:
+                            shell.shrink(admitted[0],
+                                         int(rng.integers(0, 3)))
+                        elif op == 3 and admitted:
+                            shell.grow(admitted[0], None)
+                        elif op == 4:
+                            shell.fail_region(
+                                int(rng.integers(0, n_regions)))
+                        else:
+                            shell.heal_region(
+                                int(rng.integers(0, n_regions)))
+                    except (KeyError, ValueError):
+                        pytest.fail("scripted ops must be valid")
+                    shell.verify()
+                    validate_registers(shell.registers)
+
+    def test_delta_path_matches_full_rebuild_after_whole_script(self):
+        shell = make_shell()
+        for event in TestScriptedLifecycle.EVENTS:
+            shell.post(event)
+        oracle = full_registers(shell.state, capacity=shell.capacity)
+        assert registers_content_equal(shell.registers, oracle)
+
+
+# ----------------------------------------------------------------------
+# FT monitors emit events
+# ----------------------------------------------------------------------
+class TestEventWiring:
+    def test_heartbeat_monitor_posts_heartbeat_lost(self):
+        from repro.runtime.ft import HeartbeatMonitor
+        shell = make_shell(n=2)
+        shell.submit("a", [fp(), fp()])
+        clock = [0.0]
+        mon = HeartbeatMonitor([0, 1], timeout_s=5.0,
+                               clock=lambda: clock[0], shell=shell)
+        clock[0] = 3.0
+        mon.beat(0)
+        clock[0] = 6.0
+        assert mon.sweep() == [1]
+        assert isinstance(shell.log[-1].event, HeartbeatLost)
+        assert shell.placement_of("a")[1] == ON_SERVER
+        mon.heal(1)
+        assert isinstance(shell.log[-1].event, HealRegion)
+        assert shell.placement_of("a")[1] != ON_SERVER
+        shell.verify()
+
+    def test_step_watchdog_posts_timeout_event(self):
+        import time
+        from repro.runtime.ft import StepWatchdog
+        shell = make_shell(n=2)
+        shell.submit("a", [fp(), fp()])
+        wd = StepWatchdog(deadline_s=0.0, shell=shell)
+        wd.arm(3)
+        time.sleep(0.01)
+        assert wd.check(region=1) is False
+        event = shell.log[-1].event
+        assert isinstance(event, WatchdogTimeout)
+        assert event.step == 3 and event.region == 1
+        assert shell.placement_of("a")[1] == ON_SERVER   # demoted
+        shell.verify()
+
+
+# ----------------------------------------------------------------------
+# ElasticServer: continuous batching over the shell
+# ----------------------------------------------------------------------
+class _FakeEngine:
+    """Deterministic token arithmetic; counts prefills for admission asserts."""
+
+    def __init__(self):
+        self.prefills = 0
+
+    def prefill(self, prompt):
+        self.prefills += 1
+        return int(prompt[-1]) + 1, None
+
+    def decode(self, tok, state):
+        return tok + 1, state
+
+
+def _req(app_id, start, max_new):
+    return StreamRequest(app_id=app_id,
+                         prompt=np.array([start], np.int32),
+                         max_new=max_new)
+
+
+class TestElasticServer:
+    def make(self, n_slots=2):
+        shell = make_shell()
+        shell.submit("a", [fp(), fp()], app_id=0)
+        shell.submit("b", [fp()], app_id=1)
+        server = ElasticServer(shell, n_slots=n_slots)
+        server.register_engine(0, _FakeEngine())
+        server.register_engine(1, _FakeEngine())
+        return shell, server
+
+    def test_continuous_batching_admits_while_decoding(self):
+        _, server = self.make(n_slots=2)
+        r0 = server.submit(_req(0, start=10, max_new=5))
+        r1 = server.submit(_req(0, start=20, max_new=2))
+        r2 = server.submit(_req(1, start=30, max_new=3))
+        server.step()                       # admit r0, r1
+        assert server.active_count == 2 and server.queued_count == 1
+        server.step()                       # r1 finishes -> slot rotates
+        done = {c.rid for c in server.completions}
+        assert done == {r1}
+        server.step()                       # r2 admitted, r0 still decoding
+        assert server.active_count == 2     # overlap: r0 mid-stream + r2
+        comps = {c.rid: c for c in server.run()}
+        assert set(comps) | done == {r0, r1, r2}
+        # r2 was admitted strictly after r0 and finished while the server
+        # had already been decoding r0 — the wave barrier is gone.
+        assert comps[r2].admitted_tick > 0
+        assert comps[r0].tokens == [11, 12, 13, 14, 15]
+        assert comps[r2].tokens == [31, 32, 33]
+
+    def test_run_drains_queue_when_all_slots_finish_same_tick(self):
+        """Regression: equal-length requests free every slot on one tick;
+        run() must refill from the queue, not mistake it for a stall."""
+        _, server = self.make(n_slots=2)
+        rids = [server.submit(_req(0, start=10 * i, max_new=4))
+                for i in range(3)]
+        comps = server.run()
+        assert {c.rid for c in comps} == set(rids)
+        assert server.idle
+
+    def test_single_slot_serves_sequential_requests(self):
+        _, server = self.make(n_slots=1)
+        r0 = server.submit(_req(0, start=1, max_new=2))
+        r1 = server.submit(_req(0, start=5, max_new=2))
+        comps = {c.rid: c for c in server.run()}
+        assert set(comps) == {r0, r1}
+        assert comps[r1].tokens == [6, 7]
+
+    def test_greedy_tokens_per_stream(self):
+        _, server = self.make(n_slots=4)
+        rid = server.submit(_req(1, start=7, max_new=4))
+        (comp,) = server.run()
+        assert comp.rid == rid
+        assert comp.tokens == [8, 9, 10, 11]
+
+    def test_routing_records_entry_port(self):
+        shell, server = self.make()
+        rid_a = server.submit(_req(0, start=1, max_new=1))
+        rid_b = server.submit(_req(1, start=1, max_new=1))
+        comps = {c.rid: c for c in server.run()}
+        # a's chain starts on region 0 -> port 1; b's on region 2 -> port 3.
+        assert comps[rid_a].entry_port == 1
+        assert comps[rid_b].entry_port == 3
+
+    def test_unadmitted_app_waits_for_submit_event(self):
+        shell, server = self.make()
+        server.register_engine(9, _FakeEngine())
+        server.submit(_req(9, start=5, max_new=2))
+        server.run()
+        assert server.queued_count == 1     # gated: tenant 9 not admitted
+        shell.submit("late", [fp()], app_id=9)
+        (comp,) = server.run()
+        assert comp.tokens == [6, 7]
+        assert server.idle
+
+    def test_unregistered_engine_rejected_at_submit(self):
+        _, server = self.make()
+        with pytest.raises(KeyError):
+            server.submit(_req(42, start=0, max_new=1))
+
+    def test_on_server_tenant_routes_via_host_port(self):
+        shell = make_shell(n=1)
+        shell.submit("a", [fp()], app_id=0)
+        shell.submit("spilled", [fp()], app_id=1)     # fully on-server
+        server = ElasticServer(shell, n_slots=1)
+        server.register_engine(1, _FakeEngine())
+        server.submit(_req(1, start=2, max_new=1))
+        (comp,) = server.run()
+        assert comp.entry_port == 0         # host bridge
+
+
+# ----------------------------------------------------------------------
+# PoolState invariant checker rejects corrupt states
+# ----------------------------------------------------------------------
+class TestInvariantChecker:
+    def test_detects_double_booking(self):
+        state = PoolState.create(make_regions(2))
+        state, _ = plan(state, Submit(tenant="a", footprints=(fp(),)))
+        t = state.tenant("a")
+        bad = state.with_tenant(dataclasses.replace(
+            t, placement=(0,), name="a")).with_tenant(
+                dataclasses.replace(t, name="b", placement=(0,)))
+        with pytest.raises(AssertionError):
+            check_invariants(bad)
+
+    def test_detects_unhealthy_placement(self):
+        state = PoolState.create(make_regions(2))
+        state, _ = plan(state, Submit(tenant="a", footprints=(fp(),)))
+        r = state.region(0)
+        bad = state.with_region(dataclasses.replace(r, healthy=False))
+        with pytest.raises(AssertionError):
+            check_invariants(bad)
