@@ -1,0 +1,78 @@
+"""Backend-comparison bench for the ``repro.fabric`` data plane.
+
+Times ``plan`` and the fused ``transfer`` round-trip per backend over a
+(T x n_ports) grid and reports tokens/s, so backend regressions show up in
+the machine-readable ``BENCH_fabric.json`` trajectory (written by
+``benchmarks/run.py``).  On this CPU container the pallas backend runs in
+interpret mode — correctness throughput, not TPU performance — and the
+sharded backend needs >1 local device, so it is reported only when a
+multi-device topology is available.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# Small grid: this doubles as the CI smoke bench, so it must stay fast.
+SHAPES = [(256, 4), (1024, 8)]          # (T packets, n_ports)
+D = 64                                   # payload width
+CAPACITY = 512
+
+
+def _time_us(fn, *args, n=3) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))     # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return 1e6 * (time.perf_counter() - t0) / n
+
+
+def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.registers import CrossbarRegisters
+    from repro.fabric import Fabric
+
+    rows = []
+    rng = np.random.default_rng(0)
+    backends = ["reference", "pallas"]
+    for T, n_ports in SHAPES:
+        regs = CrossbarRegisters.create(n_ports, capacity=CAPACITY)
+        dst = jnp.asarray(rng.integers(0, n_ports, T), jnp.int32)
+        src = jnp.asarray(rng.integers(0, n_ports, T), jnp.int32)
+        x = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+        base_plan = None
+        for name in backends:
+            fabric = Fabric(regs, backend=name, capacity=CAPACITY)
+            plan_us = _time_us(lambda d, s, f=fabric: f.plan(d, s).counts,
+                               dst, src)
+            transfer_us = _time_us(
+                lambda xx, d, s, f=fabric: f.transfer(xx, d, s)[0],
+                x, dst, src)
+            plan = fabric.plan(dst, src)
+            counts = np.asarray(plan.counts)
+            if base_plan is None:
+                base_plan = counts
+            rows.append({
+                "backend": name, "T": T, "n_ports": n_ports, "D": D,
+                "plan_us": round(plan_us, 1),
+                "transfer_us": round(transfer_us, 1),
+                "tokens_per_s": round(T / (transfer_us * 1e-6)),
+                "granted": int(counts.sum()),
+                "plan_equal_reference": bool(
+                    np.array_equal(counts, base_plan)),
+            })
+    claims = {
+        "note": ("CPU wall time (pallas in interpret mode); the trajectory "
+                 "tracks relative backend cost, TPU perf is the roofline's "
+                 "job"),
+        "device_count": str(jax.device_count()),
+        "sharded": "skipped (needs >1 local device)"
+        if jax.device_count() < 2 else "see rows",
+    }
+    return rows, claims

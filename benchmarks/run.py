@@ -10,6 +10,7 @@ import json
 import sys
 from pathlib import Path
 
+from benchmarks.fabric_bench import bench_fabric
 from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
                                      bench_fig5_elasticity,
                                      bench_fig6_scaling, bench_kernels_cpu,
@@ -24,8 +25,13 @@ BENCHES = {
     "fig6": ("Fig 6 — worst-case latency scaling", bench_fig6_scaling),
     "area": ("Tables I/II — area & power", bench_area),
     "kernels": ("kernel microbenchmarks (CPU)", bench_kernels_cpu),
+    "fabric": ("repro.fabric — backend comparison", bench_fabric),
     "roofline": ("§Roofline — dry-run aggregation", bench_roofline),
 }
+
+# Stable, machine-readable perf trajectory: one schema-versioned file per
+# tracked bench, overwritten in place so successive PRs diff cleanly.
+TRAJECTORY_FILES = {"fabric": "BENCH_fabric.json"}
 
 
 def main(argv=None) -> int:
@@ -51,6 +57,14 @@ def main(argv=None) -> int:
     out = Path(__file__).resolve().parent / "results.json"
     out.write_text(json.dumps(results, indent=1, default=str))
     print(f"\nwrote {out}")
+    for name, fname in TRAJECTORY_FILES.items():
+        if name not in results:
+            continue
+        traj = Path(__file__).resolve().parent / fname
+        traj.write_text(json.dumps(
+            {"schema": 1, "bench": name, **results[name]},
+            indent=1, default=str, sort_keys=True))
+        print(f"wrote {traj}")
     if failures:
         print("FAILURES:", failures)
         return 1

@@ -87,6 +87,10 @@ def main():
     overlapped = [c for c in comps if 0 < c.admitted_tick]
     print(f"   {len(overlapped)} request(s) admitted while earlier "
           f"requests were still decoding")
+    # The data plane: every tick's slot->port packets were planned through
+    # the server's shell-bound fabric under the LIVE register file.
+    print(f"   per-port fabric grants: {server.port_traffic.tolist()}  "
+          f"(fabric retraces: {server.fabric.trace_count})")
 
     # --- elasticity: A shrinks, B grows (§IV-A promote path).
     shell.post(Shrink(tenant="tenant_a", n_regions=2))

@@ -49,24 +49,32 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
                       regs: CrossbarRegisters) -> DispatchPlan:
     """Compute grants/slots for packets ``t`` with ``src[t] -> dst[t]``.
 
-    Shapes: ``dst``, ``src`` are [T] int32 with values in [0, n_ports).
+    Shapes: ``dst``, ``src`` are [T] int32.  Out-of-range ports (the padding
+    convention is ``dst = -1``) are isolation drops: the packet gets
+    INVALID_DEST, occupies no slot and never increments a stream rank — the
+    same treatment the blockwise kernels give padded rows, so every backend
+    agrees on the padded plan.
     """
     n = regs.n_ports
     T = dst.shape[0]
     dst = dst.astype(jnp.int32)
     src = src.astype(jnp.int32)
+    in_range = (dst >= 0) & (dst < n) & (src >= 0) & (src < n)
+    dstc = jnp.clip(dst, 0, n - 1)
+    srcc = jnp.clip(src, 0, n - 1)
 
     # --- isolation (one-hot AND) + reset gating -------------------------
-    iso_ok = regs.allowed[src, dst] & ~regs.reset[src] & ~regs.reset[dst]
+    iso_ok = (in_range & regs.allowed[srcc, dstc]
+              & ~regs.reset[srcc] & ~regs.reset[dstc])
 
     # --- per-(src,dst) stream rank --------------------------------------
-    pair = src * n + dst                                    # [T]
+    pair = srcc * n + dstc                                  # [T]
     pair_oh = jax.nn.one_hot(pair, n * n, dtype=jnp.int32)  # [T, n*n]
     pair_oh = pair_oh * iso_ok[:, None].astype(jnp.int32)
     rank_sd = (jnp.cumsum(pair_oh, axis=0) - pair_oh)       # exclusive cumsum
     rank_sd = jnp.take_along_axis(rank_sd, pair[:, None], axis=1)[:, 0]
 
-    quota = regs.quota[dst, src]
+    quota = regs.quota[dstc, srcc]
     quota_ok = (quota == 0) | (rank_sd < quota)
 
     granted_pre = iso_ok & quota_ok
@@ -75,20 +83,21 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
     # Composite sort key; smaller key = earlier grant. Ungranted packets get
     # +inf-like keys so they never displace granted ones.
     big = jnp.int32(T + 1)
-    key = rank_sd * n + src                                 # round-major WRR
+    key = rank_sd * n + srcc                                # round-major WRR
     sort_key = jnp.where(granted_pre, key, big * n)
     # Destination-local rank of each granted packet under the WRR order:
     # count of packets with the same dst and strictly smaller (key, t).
-    dst_oh = jax.nn.one_hot(dst, n, dtype=jnp.int32)        # [T, n]
+    dst_oh = jax.nn.one_hot(dstc, n, dtype=jnp.int32)       # [T, n]
+    dst_oh = dst_oh * in_range[:, None].astype(jnp.int32)
     order = jnp.argsort(sort_key * jnp.int32(T) + jnp.arange(T, dtype=jnp.int32))
     # scatter: position in sorted order, restricted per destination.
     sorted_dst_oh = dst_oh[order] * granted_pre[order, None].astype(jnp.int32)
     slots_sorted = jnp.cumsum(sorted_dst_oh, axis=0) - sorted_dst_oh
     slot_of_sorted = jnp.take_along_axis(
-        slots_sorted, dst[order][:, None], axis=1)[:, 0]
+        slots_sorted, dstc[order][:, None], axis=1)[:, 0]
     slot = jnp.zeros((T,), jnp.int32).at[order].set(slot_of_sorted)
 
-    cap_ok = slot < regs.capacity[dst]
+    cap_ok = slot < regs.capacity[dstc]
     keep = granted_pre & cap_ok
 
     error = jnp.where(~iso_ok, jnp.int32(ErrorCode.INVALID_DEST),

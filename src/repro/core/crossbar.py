@@ -1,15 +1,18 @@
-"""TPU crossbar interconnect — the paper's §IV-E fabric over ICI collectives.
+"""DEPRECATED compat shims — use ``repro.fabric.Fabric`` instead.
 
-Two operating modes:
+This module predates the unified data-plane API.  New code constructs a
+:class:`repro.fabric.Fabric` (``backend="reference" | "pallas" |
+"sharded"``) bound to a register file or a live ``Shell``; the functions
+here remain as thin wrappers for existing callers:
 
-- **local** (:func:`exchange_local`): packets, destinations and slabs live on
-  one device; used by the MoE layer inside a ``shard_map`` block and by tests.
+- **local** (:func:`exchange_local` / :func:`combine_local`): one
+  reference-backend dispatch round — identical to
+  ``Fabric(regs, backend="reference").dispatch(...)``.
 - **distributed** (:func:`exchange_sharded` / :func:`combine_sharded`):
-  regions are shards of a mesh axis; the crossbar's "separate bus lines per
-  destination" become an ``all_to_all`` over that axis. Each (src, dst) pair
-  owns ``capacity`` slots per round — the WB slave's register depth — and the
-  receive buffer read in (slot, src) order reproduces the WRR grant order at
-  package granularity.
+  the *legacy pair-owned-slot* sharded path — each (src, dst) pair owns its
+  own ``capacity`` slots, so its slot numbering differs from the dense
+  oracle's shared WRR interleave.  ``repro.fabric.ShardedBackend`` is the
+  plan-equivalent replacement (global WRR slots, oracle-identical plans).
 
 The register file gates everything: isolation masks, quotas and resets are
 *values*, so the Elastic Resource Manager re-routes traffic by rewriting
@@ -23,7 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.arbiter import DispatchPlan, combine, dispatch, wrr_dispatch_plan
+from repro.core.arbiter import DispatchPlan
 from repro.core.registers import CrossbarRegisters, ErrorCode
 
 
@@ -36,22 +39,29 @@ def _axis_size(axis_name: str) -> int:
 
 
 # ----------------------------------------------------------------------
-# Local (single-shard) crossbar — dense one-hot dispatch, MXU-friendly.
+# Local (single-shard) crossbar — shim over the fabric reference backend.
 # ----------------------------------------------------------------------
 def exchange_local(x: jax.Array, dst: jax.Array, src: jax.Array,
                    regs: CrossbarRegisters, capacity: int
                    ) -> Tuple[jax.Array, DispatchPlan]:
-    """Route packets ``x`` [T, D] to per-destination slabs [S, capacity, D]."""
-    plan = wrr_dispatch_plan(dst, src, regs)
-    slabs = dispatch(x, plan, regs.n_ports, capacity)
-    return slabs, plan
+    """Route packets ``x`` [T, D] to per-destination slabs [S, capacity, D].
+
+    Deprecated: ``Fabric(regs, backend="reference",
+    capacity=capacity).dispatch(x, dst, src)`` is the maintained spelling.
+    """
+    from repro.fabric.backends import ReferenceBackend
+    backend = ReferenceBackend()
+    plan = backend.plan(dst, src, regs)
+    return backend.dispatch(x, plan, regs, capacity), plan
 
 
 def combine_local(y: jax.Array, plan: DispatchPlan,
                   weights: Optional[jax.Array] = None) -> jax.Array:
+    """Deprecated: use ``Fabric.combine``."""
+    from repro.fabric.backends import ReferenceBackend
     if weights is None:
         weights = jnp.ones_like(plan.keep, dtype=y.dtype)
-    return combine(y, plan, weights)
+    return ReferenceBackend().combine(y, plan, weights)
 
 
 # ----------------------------------------------------------------------
@@ -128,7 +138,11 @@ def combine_sharded(y: jax.Array, dst: jax.Array, keep: jax.Array,
 
 @dataclasses.dataclass
 class CrossbarInterconnect:
-    """Convenience wrapper binding a register file to exchange/combine ops."""
+    """Deprecated wrapper binding a register file to exchange/combine ops.
+
+    ``repro.fabric.Fabric`` supersedes this: it adds backend selection,
+    epoch tracking against a live ``Shell``, and the fused ``transfer``
+    round-trip.  ``as_fabric()`` converts in place."""
 
     regs: CrossbarRegisters
     capacity: int
@@ -142,3 +156,9 @@ class CrossbarInterconnect:
     def reconfigure(self, **updates) -> "CrossbarInterconnect":
         """ERM write: new register values, same compiled program."""
         return dataclasses.replace(self, regs=self.regs.write(**updates))
+
+    def as_fabric(self, backend: str = "reference", **kw):
+        """The maintained replacement: a ``Fabric`` over the same file."""
+        from repro.fabric import Fabric
+        return Fabric(self.regs, backend=backend, capacity=self.capacity,
+                      **kw)

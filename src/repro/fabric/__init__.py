@@ -1,0 +1,31 @@
+"""``repro.fabric`` — one data-plane API over the §IV-E interconnect.
+
+The control plane (``repro.shell``) rewrites registers; this package is the
+matching data-plane seam: a single :class:`Fabric` object binds a register
+file (or a live ``Shell``) to a pluggable, plan-equivalent dispatch backend
+
+    reference  — dense one-hot/MXU oracle (semantics ground truth)
+    pallas     — blockwise TPU kernels, padding handled internally
+    sharded    — all_to_all over a mesh axis (inside shard_map)
+
+and exposes ``plan`` / ``dispatch`` / ``combine`` / fused ``transfer``.
+Register *values* are read at call time, so shell reconfigurations re-route
+traffic with zero recompiles — see ``repro.fabric.fabric`` for the contract
+and ``tests/test_fabric.py`` for the equivalence + retrace regressions.
+
+Migration: ``repro.core.crossbar`` (``exchange_local`` / ``exchange_sharded``
+/ ``CrossbarInterconnect``) and the raw ``repro.kernels.crossbar_dispatch``
+entry points are now thin compatibility shims over these backends.
+"""
+from repro.core.arbiter import DispatchPlan                     # noqa: F401
+from repro.fabric.backends import (PallasBackend,               # noqa: F401
+                                   ReferenceBackend, ShardedBackend,
+                                   backend_names, get_backend,
+                                   register_fabric_backend)
+from repro.fabric.fabric import Fabric, fabric_for_shell        # noqa: F401
+
+__all__ = [
+    "Fabric", "fabric_for_shell", "DispatchPlan",
+    "ReferenceBackend", "PallasBackend", "ShardedBackend",
+    "get_backend", "register_fabric_backend", "backend_names",
+]

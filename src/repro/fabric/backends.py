@@ -1,0 +1,289 @@
+"""Pluggable data-plane backends for :class:`repro.fabric.Fabric`.
+
+Every backend realises the same §IV-E interconnect contract — *plan* grant
+decisions from the live register file, *dispatch* packets into destination
+slabs, *combine* results back to packet order — and all of them are
+plan-equivalent: identical ``keep``/``slot``/``error``/``counts`` for the
+same packets and registers (property-tested against the dense oracle in
+``tests/test_fabric.py``).
+
+- ``reference`` — the dense one-hot/MXU oracle (``repro.core.arbiter``).
+  O(T^2) selection tensors; the semantics ground truth.
+- ``pallas``    — the blockwise TPU kernels (``repro.kernels
+  .crossbar_dispatch``).  The per-source plan kernel is swept once per
+  master port and the per-stream ranks are composed into the global WRR
+  slot order with a closed form (no sort):
+
+      slot(t) = sum_s' min(rank_t, granted[s', dst_t])
+              + #{s' < src_t : granted[s', dst_t] > rank_t}
+
+  which is exactly the lexicographic (round, source) position the rotating
+  arbiter serves.  Token padding to the kernel block size is internal
+  (``dst = -1`` rows drop via the isolation check).
+- ``sharded``   — regions are shards of a mesh axis; dispatch is an
+  ``all_to_all`` of per-destination send slabs, combine an ``all_gather``
+  of result slabs.  Methods must run inside ``shard_map`` over the axis;
+  the per-source granted counts are ``all_gather``-ed so every shard
+  computes the same global WRR slots the dense oracle assigns.
+
+Packets carry *values*, never shapes, from the register file — so an ERM
+register rewrite re-routes traffic through already-compiled dispatch code.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arbiter
+from repro.core.arbiter import DispatchPlan
+from repro.core.registers import CrossbarRegisters, ErrorCode
+
+
+def _empty_plan(dst: jax.Array, n_ports: int) -> DispatchPlan:
+    """The zero-packet plan: no grants, empty histogram."""
+    T = dst.shape[0]
+    z = jnp.zeros((T,), jnp.int32)
+    return DispatchPlan(keep=z.astype(bool), slot=z,
+                        dst=dst.astype(jnp.int32), error=z,
+                        counts=jnp.zeros((n_ports,), jnp.int32),
+                        drops=jnp.zeros((4,), jnp.int32))
+
+
+def _wrr_slots(rank: jax.Array, granted: jax.Array, dstc: jax.Array,
+               src_index) -> jax.Array:
+    """Closed-form WRR interleave shared by the pallas/sharded backends.
+
+    Position of (``rank``, source) in the lexicographic (round, source)
+    grant order of each packet's destination — exactly the rotating
+    arbiter's service order, given ``granted[src, dst]`` iso+quota-passing
+    counts.  ``src_index`` is a per-packet [T] source array or this
+    shard's scalar index; the oracle equivalence of every backend rests on
+    this one function.
+    """
+    n = granted.shape[0]
+    g_at = granted[:, dstc]                                  # [n, T]
+    slot = jnp.sum(jnp.minimum(rank[None, :], g_at), axis=0)
+    return slot + jnp.sum(
+        ((jnp.arange(n)[:, None] < src_index)
+         & (g_at > rank[None, :])).astype(jnp.int32), axis=0)
+
+
+# ----------------------------------------------------------------------
+# reference — dense one-hot oracle
+# ----------------------------------------------------------------------
+class ReferenceBackend:
+    """Dense one-hot/MXU formulation; the plan-semantics ground truth."""
+
+    name = "reference"
+
+    def plan(self, dst: jax.Array, src: jax.Array,
+             regs: CrossbarRegisters) -> DispatchPlan:
+        if dst.shape[0] == 0:
+            return _empty_plan(dst, regs.n_ports)
+        return arbiter.wrr_dispatch_plan(dst, src, regs)
+
+    def dispatch(self, x: jax.Array, plan: DispatchPlan,
+                 regs: CrossbarRegisters, capacity: int) -> jax.Array:
+        return arbiter.dispatch(x, plan, regs.n_ports, capacity)
+
+    def combine(self, y: jax.Array, plan: DispatchPlan,
+                weights: jax.Array) -> jax.Array:
+        return arbiter.combine(y, plan, weights)
+
+
+# ----------------------------------------------------------------------
+# pallas — blockwise kernels + closed-form WRR slot composition
+# ----------------------------------------------------------------------
+class PallasBackend:
+    """Blockwise Pallas kernels; padding and multi-source composition are
+    handled here so callers never see block sizes or ``dst = -1`` rows."""
+
+    name = "pallas"
+
+    def __init__(self, *, block_t: int = 256,
+                 interpret: Optional[bool] = None):
+        self.block_t = block_t
+        self.interpret = interpret
+
+    def plan(self, dst: jax.Array, src: jax.Array,
+             regs: CrossbarRegisters) -> DispatchPlan:
+        from repro.kernels.crossbar_dispatch.ops import crossbar_plan
+        n = regs.n_ports
+        T = dst.shape[0]
+        if T == 0:
+            return _empty_plan(dst, n)
+        dst = dst.astype(jnp.int32)
+        src = src.astype(jnp.int32)
+        dstc = jnp.clip(dst, 0, n - 1)
+        srcc = jnp.clip(src, 0, n - 1)
+        # Fold reset gating into the isolation rows the kernel consumes.
+        allowed_eff = (regs.allowed & ~regs.reset[:, None]
+                       & ~regs.reset[None, :]).astype(jnp.int32)
+        # Per-source sweep with capacity disabled: the kernel yields the
+        # per-(src, dst) stream ranks + iso/quota verdicts; masking other
+        # sources' packets to dst = -1 drops them from this stream.
+        nocap = jnp.full((n,), jnp.int32(T + 1))
+        keeps, ranks, errs, cnts = [], [], [], []
+        for s in range(n):
+            k, r, e, c = crossbar_plan(
+                jnp.where(src == s, dst, -1), allowed_eff[s],
+                regs.quota[:, s], nocap, block_t=self.block_t,
+                interpret=self.interpret)
+            keeps.append(k), ranks.append(r), errs.append(e), cnts.append(c)
+        t_ix = jnp.arange(T)
+        keep_pre = jnp.stack(keeps)[srcc, t_ix] > 0          # iso & quota
+        rank = jnp.stack(ranks)[srcc, t_ix]
+        err_pre = jnp.stack(errs)[srcc, t_ix]
+        granted = jnp.stack(cnts)                            # [src, dst]
+
+        slot = _wrr_slots(rank, granted, dstc, srcc[None, :])
+        cap_ok = slot < regs.capacity[dstc]
+        keep = keep_pre & cap_ok
+        error = jnp.where(err_pre != ErrorCode.OK, err_pre,
+                          jnp.where(cap_ok, jnp.int32(ErrorCode.OK),
+                                    jnp.int32(ErrorCode.ACK_TIMEOUT)))
+        counts = jnp.zeros((n,), jnp.int32).at[dstc].add(
+            keep.astype(jnp.int32))
+        drops = jnp.zeros((4,), jnp.int32).at[error].add(1)
+        return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0),
+                            dst=dst, error=error, counts=counts, drops=drops)
+
+    def dispatch(self, x: jax.Array, plan: DispatchPlan,
+                 regs: CrossbarRegisters, capacity: int) -> jax.Array:
+        from repro.kernels.crossbar_dispatch.ops import crossbar_dispatch
+        return crossbar_dispatch(x, plan.dst, plan.keep.astype(jnp.int32),
+                                 plan.slot, n_ports=regs.n_ports,
+                                 capacity=capacity, block_t=self.block_t,
+                                 interpret=self.interpret)
+
+    def combine(self, y: jax.Array, plan: DispatchPlan,
+                weights: jax.Array) -> jax.Array:
+        from repro.kernels.crossbar_dispatch.ops import crossbar_combine
+        return crossbar_combine(y, plan.dst, plan.keep.astype(jnp.int32),
+                                plan.slot, weights, block_t=self.block_t,
+                                interpret=self.interpret)
+
+
+# ----------------------------------------------------------------------
+# sharded — regions as shards of a mesh axis (inside shard_map)
+# ----------------------------------------------------------------------
+def _axis_size(axis_name: str) -> int:
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+class ShardedBackend:
+    """Crossbar over ICI collectives: every method must be called inside a
+    ``shard_map`` over ``axis_name``; each shard is one source region (its
+    source id is the axis index — the ``src`` argument is ignored), holds
+    its local packets, and after ``dispatch`` owns the receive slab of the
+    destination with its index.  ``counts``/``drops`` are psummed so every
+    shard sees the oracle's global histogram."""
+
+    name = "sharded"
+
+    def __init__(self, axis_name: str):
+        self.axis_name = axis_name
+
+    def plan(self, dst: jax.Array, src: jax.Array,
+             regs: CrossbarRegisters) -> DispatchPlan:
+        ax = self.axis_name
+        n = _axis_size(ax)
+        me = jax.lax.axis_index(ax)
+        dst = dst.astype(jnp.int32)
+        in_range = (dst >= 0) & (dst < n)
+        dstc = jnp.clip(dst, 0, n - 1)
+        iso_ok = (in_range & regs.allowed[me, dstc]
+                  & ~regs.reset[me] & ~regs.reset[dstc])
+        dst_oh = (jax.nn.one_hot(dstc, n, dtype=jnp.int32)
+                  * iso_ok[:, None].astype(jnp.int32))
+        rank = jnp.cumsum(dst_oh, axis=0) - dst_oh
+        rank = jnp.take_along_axis(rank, dstc[:, None], axis=1)[:, 0]
+        quota = regs.quota[dstc, me]
+        keep_pre = iso_ok & ((quota == 0) | (rank < quota))
+
+        # Global WRR slots from the all-gathered per-source granted counts.
+        mine = jnp.sum(dst_oh * keep_pre[:, None].astype(jnp.int32), axis=0)
+        granted = jax.lax.all_gather(mine, ax)               # [src, dst]
+        slot = _wrr_slots(rank, granted, dstc, me)
+        cap_ok = slot < regs.capacity[dstc]
+        keep = keep_pre & cap_ok
+        error = jnp.where(
+            ~iso_ok, jnp.int32(ErrorCode.INVALID_DEST),
+            jnp.where(~keep_pre, jnp.int32(ErrorCode.GRANT_TIMEOUT),
+                      jnp.where(cap_ok, jnp.int32(ErrorCode.OK),
+                                jnp.int32(ErrorCode.ACK_TIMEOUT))))
+        counts = jax.lax.psum(
+            jnp.zeros((n,), jnp.int32).at[dstc].add(keep.astype(jnp.int32)),
+            ax)
+        drops = jax.lax.psum(
+            jnp.zeros((4,), jnp.int32).at[error].add(1), ax)
+        return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0),
+                            dst=dst, error=error, counts=counts, drops=drops)
+
+    def dispatch(self, x: jax.Array, plan: DispatchPlan,
+                 regs: CrossbarRegisters, capacity: int) -> jax.Array:
+        """Local packets [T_loc, D] -> this shard's receive slab [C, D].
+
+        Slots are globally unique per destination, so the per-source
+        contributions coming out of the ``all_to_all`` just sum."""
+        n = _axis_size(self.axis_name)
+        dst_oh = jax.nn.one_hot(plan.dst, n, dtype=x.dtype)  # -1 -> zero row
+        slot_oh = jax.nn.one_hot(plan.slot, capacity, dtype=x.dtype)
+        sel = (dst_oh[:, :, None] * slot_oh[:, None, :]
+               * plan.keep[:, None, None].astype(x.dtype))
+        send = jnp.einsum("tsc,td->scd", sel, x)             # [n, C, D]
+        recv = jax.lax.all_to_all(send, self.axis_name, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        return jnp.sum(recv, axis=0)                         # [C, D]
+
+    def combine(self, y: jax.Array, plan: DispatchPlan,
+                weights: jax.Array) -> jax.Array:
+        """Local result slab [C, D] -> local packets [T_loc, D], weighted.
+
+        Result slabs are all-gathered (every source reads the rows its
+        packets landed in); dropped packets get zeros."""
+        n = _axis_size(self.axis_name)
+        C = y.shape[0]
+        slabs = jax.lax.all_gather(y, self.axis_name)        # [S, C, D]
+        flat = slabs.reshape(n * C, -1)
+        addr = jnp.clip(plan.dst, 0, n - 1) * C + plan.slot
+        out = jnp.take(flat, addr, axis=0)
+        return out * (plan.keep.astype(y.dtype) * weights)[:, None]
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+_BACKENDS: Dict[str, Callable[..., object]] = {
+    "reference": ReferenceBackend,
+    "pallas": PallasBackend,
+    "sharded": ShardedBackend,
+}
+
+
+def register_fabric_backend(name: str, factory: Callable[..., object],
+                            ) -> None:
+    """Register a custom backend factory under ``name`` (duck-typed:
+    ``plan``/``dispatch``/``combine`` with the signatures above)."""
+    _BACKENDS[name] = factory
+
+
+def get_backend(spec, **kwargs):
+    """Resolve a backend: an instance passes through, a name constructs."""
+    if not isinstance(spec, str):
+        return spec
+    try:
+        factory = _BACKENDS[spec]
+    except KeyError:
+        raise ValueError(f"unknown fabric backend {spec!r}; "
+                         f"registered: {sorted(_BACKENDS)}") from None
+    return factory(**kwargs)
+
+
+def backend_names():
+    return sorted(_BACKENDS)

@@ -1,0 +1,177 @@
+"""``Fabric`` — one data-plane object over the crossbar register file.
+
+PR 1 put the control plane behind ``Shell.post``; this is the matching seam
+for the data plane (§IV-E).  One object binds a register file (or a live
+``Shell``) to a dispatch backend and exposes the whole packet round-trip:
+
+    fabric = Fabric(regs, backend="pallas", capacity=64)
+    plan          = fabric.plan(dst, src)
+    slabs, plan   = fabric.dispatch(x, dst, src)
+    y             = fabric.combine(slabs, plan)
+    y, plan       = fabric.transfer(x, dst, src, apply_fn=module_fn)
+
+**Epoch awareness is the point.**  Every jitted entry point takes the
+register file as a *traced argument*: shapes are static, values are read at
+call time.  A fabric bound to a ``Shell`` (``shell.fabric()``) re-reads
+``shell.registers`` on every call, so a ``shell.post(Grow(...))`` re-routes
+the very next ``transfer`` without a single recompile — the paper's cheap
+reconfiguration surface, enforced at the API boundary.  ``trace_count``
+exposes how often XLA retraced, which the regression tests pin across
+reconfigurations.
+
+Backends (``reference`` / ``pallas`` / ``sharded``) are plan-equivalent and
+selected at construction; see ``repro.fabric.backends``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arbiter import DispatchPlan
+from repro.core.registers import CrossbarRegisters
+from repro.fabric.backends import get_backend
+
+ApplyFn = Callable[[jax.Array], jax.Array]
+
+
+class Fabric:
+    """Register-gated packet transfer with a pluggable dispatch backend.
+
+    Parameters
+    ----------
+    registers:
+        A ``CrossbarRegisters``, a live ``Shell`` (tracked: every call
+        reads the shell's current, delta-maintained file), or a zero-arg
+        callable returning the current registers.
+    backend:
+        ``"reference"`` | ``"pallas"`` | ``"sharded"`` | a backend
+        instance.  ``backend_kw`` feed the named factory (e.g.
+        ``block_t=`` for pallas, ``axis_name=`` for sharded).
+    capacity:
+        Static receive-slab depth (tokens per destination).  Grant checks
+        use ``min(registers.capacity, capacity)`` so register values stay
+        the dynamic bandwidth knob while shapes stay compiled.  Defaults
+        to the bound register file's max capacity at construction.
+    """
+
+    def __init__(self, registers, *, backend: Union[str, Any] = "reference",
+                 capacity: Optional[int] = None, **backend_kw):
+        if isinstance(registers, CrossbarRegisters):
+            regs0 = registers
+            self._regs_fn = lambda: regs0
+        elif hasattr(registers, "registers"):
+            # duck-typed Shell: live property, re-read on every call
+            self._regs_fn = lambda: registers.registers
+        elif callable(registers):
+            self._regs_fn = registers
+        else:
+            raise TypeError(f"cannot bind fabric to {type(registers)!r}")
+        self.backend = get_backend(backend, **backend_kw)
+        if capacity is None:
+            capacity = int(np.max(np.asarray(self.registers.capacity)))
+        self.capacity = int(capacity)
+        self._trace_counts = {"plan": 0, "dispatch": 0, "combine": 0,
+                              "transfer": 0}
+        self._jit_plan = jax.jit(self._plan_impl)
+        self._jit_dispatch = jax.jit(self._dispatch_impl)
+        self._jit_combine = jax.jit(self._combine_impl)
+        self._jit_transfer = jax.jit(self._transfer_impl,
+                                     static_argnames=("apply_fn",))
+
+    # ---- live views ---------------------------------------------------
+    @property
+    def registers(self) -> CrossbarRegisters:
+        """The register file read *now* (live when bound to a shell)."""
+        return self._regs_fn()
+
+    @property
+    def epoch(self) -> int:
+        return int(self.registers.version)
+
+    @property
+    def n_ports(self) -> int:
+        return self.registers.n_ports
+
+    @property
+    def trace_count(self) -> int:
+        """Total retraces across all entry points (regression-pinned:
+        reconfigurations must not increase it)."""
+        return sum(self._trace_counts.values())
+
+    @property
+    def trace_counts(self):
+        return dict(self._trace_counts)
+
+    def _gated(self, regs: CrossbarRegisters) -> CrossbarRegisters:
+        """Register capacities clamped to the static slab depth, so every
+        backend grants into slots that exist."""
+        return dataclasses.replace(
+            regs, capacity=jnp.minimum(regs.capacity,
+                                       jnp.int32(self.capacity)))
+
+    # ---- jitted impls (register values are traced arguments) ----------
+    def _plan_impl(self, regs, dst, src):
+        self._trace_counts["plan"] += 1          # python: counts traces only
+        return self.backend.plan(dst, src, self._gated(regs))
+
+    def _dispatch_impl(self, regs, x, dst, src):
+        self._trace_counts["dispatch"] += 1
+        plan = self.backend.plan(dst, src, self._gated(regs))
+        return self.backend.dispatch(x, plan, regs, self.capacity), plan
+
+    def _combine_impl(self, regs, y, plan, weights):
+        self._trace_counts["combine"] += 1
+        return self.backend.combine(y, plan, weights)
+
+    def _transfer_impl(self, regs, x, dst, src, weights, *, apply_fn):
+        self._trace_counts["transfer"] += 1
+        gated = self._gated(regs)
+        plan = self.backend.plan(dst, src, gated)
+        slabs = self.backend.dispatch(x, plan, gated, self.capacity)
+        y = slabs if apply_fn is None else apply_fn(slabs)
+        return self.backend.combine(y, plan, weights), plan
+
+    # ---- public API ---------------------------------------------------
+    def plan(self, dst: jax.Array, src: jax.Array) -> DispatchPlan:
+        """Grant decisions for packets ``src[t] -> dst[t]`` under the
+        current register values (``dst = -1`` marks padding)."""
+        return self._jit_plan(self.registers, dst, src)
+
+    def dispatch(self, x: jax.Array, dst: jax.Array, src: jax.Array
+                 ) -> Tuple[jax.Array, DispatchPlan]:
+        """Plan + scatter packets [T, D] into destination slabs."""
+        return self._jit_dispatch(self.registers, x, dst, src)
+
+    def combine(self, y: jax.Array, plan: DispatchPlan,
+                weights: Optional[jax.Array] = None) -> jax.Array:
+        """Gather result slabs back to packet order; dropped packets get
+        zeros (their error codes live in ``plan.error``)."""
+        if weights is None:
+            weights = jnp.ones(plan.keep.shape, y.dtype)
+        return self._jit_combine(self.registers, y, plan, weights)
+
+    def transfer(self, x: jax.Array, dst: jax.Array, src: jax.Array,
+                 apply_fn: Optional[ApplyFn] = None,
+                 weights: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, DispatchPlan]:
+        """Fused round-trip: plan -> dispatch -> ``apply_fn`` on the slabs
+        -> combine.  One compiled program per (shape, ``apply_fn``)
+        combination — pass a stable function, not a fresh lambda per call,
+        or you pay a retrace each time."""
+        if weights is None:
+            weights = jnp.ones(dst.shape, x.dtype)
+        return self._jit_transfer(self.registers, x, dst, src, weights,
+                                  apply_fn=apply_fn)
+
+
+def fabric_for_shell(shell, *, backend="reference", capacity=None,
+                     **backend_kw) -> Fabric:
+    """A fabric tracking ``shell.registers`` across epochs (the
+    implementation behind ``Shell.fabric``)."""
+    if capacity is None:
+        capacity = getattr(shell, "capacity", None)
+    return Fabric(shell, backend=backend, capacity=capacity, **backend_kw)

@@ -1,9 +1,17 @@
-"""Public entry points for the crossbar-dispatch kernels.
+"""Raw entry points for the crossbar-dispatch kernels (compat shims).
 
-Handles token padding (to the block size) and backend selection
-(interpret=True off-TPU). Padding tokens are tagged dst = -1, which the plan
-kernel drops via the isolation check — identical to the paper's invalid-
-destination path, so padding needs no special-casing downstream.
+These are the *single-source-region* kernels: ``dst`` plus raw register
+rows for one master port.  New code should go through
+``repro.fabric.Fabric(..., backend="pallas")``, which composes these into
+the full multi-source WRR plan, tracks register epochs, and stays
+plan-equivalent with the dense oracle; the functions here remain as thin
+shims for existing callers and the kernel-vs-oracle test sweeps.
+
+Handles token padding (to the block size), the zero-packet edge case, and
+backend selection (interpret=True off-TPU). Padding tokens are tagged
+dst = -1, which the plan kernel drops via the isolation check — identical
+to the paper's invalid-destination path, so padding needs no
+special-casing downstream.
 """
 from __future__ import annotations
 
@@ -38,6 +46,9 @@ def crossbar_plan(dst: jax.Array, allowed_row: jax.Array,
     if interpret is None:
         interpret = _should_interpret()
     n_ports = allowed_row.shape[0]
+    if dst.shape[0] == 0:       # zero-packet round: nothing granted
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z, z, jnp.zeros((n_ports,), jnp.int32)
     block_t = min(block_t, max(8, dst.shape[0]))
     dstp, T = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
     keep, slot, err, counts = _k.plan_call(
@@ -54,6 +65,8 @@ def crossbar_dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
     """Pack granted packets [T, D] into slabs [n_ports, capacity, D]."""
     if interpret is None:
         interpret = _should_interpret()
+    if x.shape[0] == 0:
+        return jnp.zeros((n_ports, capacity, x.shape[1]), x.dtype)
     block_t = min(block_t, max(8, x.shape[0]))
     xp, _ = _pad_tokens(x, block_t, 0)
     dstp, _ = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
@@ -72,6 +85,8 @@ def crossbar_combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
     if interpret is None:
         interpret = _should_interpret()
     T = dst.shape[0]
+    if T == 0:
+        return jnp.zeros((0, y.shape[2]), y.dtype)
     block_t = min(block_t, max(8, T))
     dstp, _ = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
     keepp, _ = _pad_tokens(keep.astype(jnp.int32), block_t, 0)

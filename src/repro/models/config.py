@@ -14,7 +14,10 @@ class MoEConfig:
     top_k: int
     capacity_factor: float = 1.25
     # "dense" = Mesh-TF one-hot-matmul dispatch (faithful baseline);
-    # "gather" = indexed scatter/gather (§Perf iteration "moe-gather").
+    # "gather" = indexed scatter/gather (§Perf iteration "moe-gather");
+    # any other value names a repro.fabric backend ("reference",
+    # "pallas", ...) — the layer then routes groups through
+    # Fabric.transfer, sharing the shell's interconnect implementation.
     dispatch: str = "dense"
 
 

@@ -19,6 +19,8 @@ groups. Group size is a tunable (perf hillclimb lever).
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -61,10 +63,22 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
     "gather" routes by indexed scatter/gather instead: O(T*k*d) data
     movement and no selection tensor (§Perf iteration "moe-gather").
     Identical packet semantics: same ranks, same WRR quota drops.
+
+    Any other value names a ``repro.fabric`` backend ("reference",
+    "pallas", or a registered custom): the layer then routes every group
+    through a ``Fabric.transfer`` round-trip — experts are crossbar slave
+    ports, ``expert_mask`` is the isolation row, capacity is the slab
+    depth — so the MoE data plane and the shell's interconnect share one
+    implementation (and one plan semantics) instead of re-deriving ranks
+    here.
     """
     if dispatch_impl == "gather":
         return moe_apply_gather(params, x, moe, act, group_size=group_size,
                                 expert_mask=expert_mask)
+    if dispatch_impl != "dense":
+        return moe_apply_fabric(params, x, moe, act, group_size=group_size,
+                                expert_mask=expert_mask,
+                                backend=dispatch_impl)
     B, S, d = x.shape
     E, k = moe.n_experts, moe.top_k
     T = B * S
@@ -212,6 +226,108 @@ def moe_apply_gather(params, x: jax.Array, moe: MoEConfig, act: str, *,
         "aux_loss": aux_loss,
         "dropped": jnp.sum(~keep),
         "iso_dropped": iso_dropped,
+        "capacity": jnp.asarray(cap),
+    }
+    return y, stats
+
+
+@functools.lru_cache(maxsize=None)
+def _group_fabric(n_experts: int, capacity: int, backend: str):
+    """One cached fabric (and its jit caches) per MoE geometry.
+
+    The fabric reads its registers through a mutable cell so the caller
+    can swap in the tenant's isolation mask per forward pass — values
+    steer routing, the compiled dispatch/combine programs are reused
+    across calls (and across layers sharing a geometry)."""
+    from repro.core.registers import CrossbarRegisters
+    from repro.fabric import Fabric
+    cell = {"regs": CrossbarRegisters.create(n_experts, capacity=capacity)}
+    fabric = Fabric(lambda: cell["regs"], backend=backend, capacity=capacity)
+    return fabric, cell
+
+
+def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
+                     group_size: int = 1024,
+                     expert_mask: Optional[jax.Array] = None,
+                     backend: str = "reference"
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """MoE dispatch as a ``repro.fabric`` transfer — one data-plane impl.
+
+    Per group: tokens are packets from one master port, experts are the
+    slave ports, ``expert_mask`` is the tenant isolation row, and the
+    expert capacity is the receive-slab depth.  The whole
+    plan/dispatch/expert/combine round-trip is a single vmapped
+    ``Fabric.transfer`` with the expert FFN as ``apply_fn`` — so whichever
+    backend serves the shell (reference oracle, blockwise Pallas kernels)
+    also serves the MoE layer, with the paper's error codes as the drop
+    statistics.
+    """
+    from repro.core.registers import ErrorCode
+
+    B, S, d = x.shape
+    E, k = moe.n_experts, moe.top_k
+    T = B * S
+    g = min(group_size, T)
+    G = T // g
+    assert G * g == T, f"tokens {T} not divisible by group size {g}"
+    xf = x.reshape(G, g, d)
+
+    logits = jnp.einsum("gtd,de->gte", xf, params["w_router"]).astype(jnp.float32)
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    dst = top_e.reshape(G, g * k)
+    w = top_p.reshape(G, g * k).astype(x.dtype)
+    cap = expert_capacity(g, moe)
+
+    fabric, cell = _group_fabric(E, cap, backend)
+    canonical = cell["regs"]
+    # Fully specify the isolation mask every call — the cell is shared
+    # across calls (and tenants) on this geometry, so nothing may inherit
+    # a previous call's mask; restored below so no (possibly traced) mask
+    # outlives this forward pass.
+    allowed = (jnp.broadcast_to(expert_mask[None, :], (E, E))
+               if expert_mask is not None
+               else jnp.ones((E, E), bool))
+    cell["regs"] = dataclasses.replace(canonical, allowed=allowed)
+    src = jnp.zeros((g * k,), jnp.int32)
+
+    def experts_fn(slabs):                                 # [E, C, d]
+        h = jnp.einsum("ecd,edf->ecf", slabs, params["w_in"])
+        if act in ("swiglu", "geglu"):
+            gate, up = jnp.split(h, 2, axis=-1)
+            a = jax.nn.silu(gate.astype(jnp.float32)) if act == "swiglu" \
+                else jax.nn.gelu(gate.astype(jnp.float32))
+            h = (a * up.astype(jnp.float32)).astype(slabs.dtype)
+        else:
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(slabs.dtype)
+        return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+    def one_group(xg, dg, wg):
+        # dispatch/combine are the fabric's shape-cached jits; the expert
+        # compute stays in the caller's trace (params close over nothing
+        # that would key a recompile).
+        xk = jnp.repeat(xg, k, axis=0)                     # [gk, d]
+        slabs, plan = fabric.dispatch(xk, dg, src)
+        return fabric.combine(experts_fn(slabs), plan, weights=wg), plan
+
+    try:
+        y, plans = jax.vmap(one_group)(xf, dst, w)         # y [G, gk, d]
+    finally:
+        cell["regs"] = canonical
+    y = y.reshape(G, g, k, d).sum(axis=2).reshape(B, S, d)
+
+    frac_tokens = (jnp.sum(plans.counts, axis=0) / (G * g * k)
+                   ).astype(jnp.float32)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+    stats = {
+        "aux_loss": aux_loss,
+        "dropped": jnp.sum(~plans.keep),
+        "iso_dropped": jnp.sum(plans.drops[:, ErrorCode.INVALID_DEST]),
         "capacity": jnp.asarray(cap),
     }
     return y, stats

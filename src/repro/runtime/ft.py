@@ -129,21 +129,35 @@ class HeartbeatMonitor:
 
 
 class StragglerStats:
-    """EWMA step times per region; flags persistent stragglers."""
+    """EWMA step times per region; flags persistent stragglers.
+
+    With a ``shell`` attached, :meth:`sweep` posts a ``WatchdogTimeout``
+    event for every *newly* flagged straggler (once per streak — the
+    planner demotes the region; re-posting while it is already failed
+    would be noise), closing the poll-only gap: ``TrainLoop`` feeds its
+    per-step times here and stragglers demote through the event bus with
+    no example-level polling.
+    """
 
     def __init__(self, region_ids: List[int], alpha: float = 0.3,
-                 threshold: float = 1.5, patience: int = 3):
+                 threshold: float = 1.5, patience: int = 3, *,
+                 shell=None):
         self.alpha = alpha
         self.threshold = threshold
         self.patience = patience
+        self.shell = shell
         self.ewma: Dict[int, Optional[float]] = {r: None for r in region_ids}
         self.strikes: Dict[int, int] = {r: 0 for r in region_ids}
+        self._reported: set = set()
+        self._dirty: set = set()
 
     def record(self, region: int, step_s: float) -> None:
         prev = self.ewma.get(region)
         self.ewma[region] = (step_s if prev is None
                              else self.alpha * step_s
                              + (1 - self.alpha) * prev)
+        self.strikes.setdefault(region, 0)    # regions may join the fleet late
+        self._dirty.add(region)
 
     def _median(self) -> Optional[float]:
         vals = sorted(v for v in self.ewma.values() if v is not None)
@@ -153,16 +167,51 @@ class StragglerStats:
 
     def stragglers(self) -> List[int]:
         """Regions whose EWMA exceeded threshold x median for ``patience``
-        consecutive sweeps."""
+        consecutive *recorded* steps.
+
+        A region's strike count advances only when a new ``record`` for it
+        arrived since the last call — so with stats shared fleet-wide,
+        every loop sweeping on its own step advances its own region's
+        streak once per step, not once per peer sweep (one transiently
+        slow step cannot burn through ``patience``)."""
         med = self._median()
         out = []
         if med is None or med == 0:
             return out
         for region, v in self.ewma.items():
-            if v is not None and v > self.threshold * med:
-                self.strikes[region] += 1
-            else:
-                self.strikes[region] = 0
+            if region in self._dirty:
+                self._dirty.discard(region)
+                if v is not None and v > self.threshold * med:
+                    self.strikes[region] += 1
+                else:
+                    self.strikes[region] = 0
+                    self._reported.discard(region)
             if self.strikes[region] >= self.patience:
                 out.append(region)
+        return out
+
+    def sweep(self, step: int = -1) -> List[int]:
+        """Flag stragglers and post ``WatchdogTimeout`` for new ones.
+
+        Returns the currently flagged regions.  Emission is once per
+        straggler streak and only while the region is still healthy in the
+        shell's pool (the resulting demote makes a second post redundant).
+        """
+        out = self.stragglers()
+        if self.shell is None:
+            return out
+        med = self._median() or 0.0
+        for region in out:
+            if region in self._reported:
+                continue
+            try:
+                healthy = self.shell.state.region(region).healthy
+            except (KeyError, IndexError):
+                continue          # unknown to this pool: retry next sweep
+            self._reported.add(region)
+            if healthy:
+                self.shell.post(WatchdogTimeout(
+                    step=step, region=region,
+                    elapsed_s=float(self.ewma[region] or 0.0),
+                    deadline_s=self.threshold * med))
         return out

@@ -45,7 +45,8 @@ class TrainLoop:
                  ckpt_dir: Optional[Path] = None, *,
                  resume: bool = False,
                  on_log: Optional[Callable[[Dict[str, Any]], None]] = None,
-                 shell=None):
+                 shell=None, region: Optional[int] = None,
+                 straggler_stats=None):
         self.cfg = cfg
         self.run = run
         self.model = build_model(cfg)
@@ -56,6 +57,18 @@ class TrainLoop:
         # caller to poll ``watchdog.events``.
         self.shell = shell
         self.watchdog = StepWatchdog(run.step_deadline_s, shell=shell)
+        # Fleet straggler detection: pass a StragglerStats shared across
+        # the fleet's loops (each loop records its own ``region``); a
+        # persistent straggler posts WatchdogTimeout through the shell —
+        # no polling of ``stats.stragglers()`` needed.  ``region`` also
+        # attributes blown step deadlines: with it set, a WatchdogTimeout
+        # names this loop's region and the planner demotes it (without it
+        # the event stays informational, as before).
+        self.region = region
+        self.straggler_stats = straggler_stats
+        if (straggler_stats is not None and straggler_stats.shell is None
+                and shell is not None):
+            straggler_stats.shell = shell
         self.ckpt = (CheckpointManager(ckpt_dir, keep=run.ckpt_keep)
                      if ckpt_dir is not None else None)
         self.history: List[Dict[str, Any]] = []
@@ -97,7 +110,13 @@ class TrainLoop:
                     self.params, self.opt_state, batch)
                 loss = float(loss)
                 dt = time.monotonic() - t0
-                self.watchdog.check()
+                self.watchdog.check(region=self.region)
+                if (self.straggler_stats is not None
+                        and self.region is not None):
+                    # no region identity -> nothing to attribute: recording
+                    # under a default id could demote someone else's region
+                    self.straggler_stats.record(self.region, dt)
+                    self.straggler_stats.sweep(step=step)
 
                 if step % run.log_every == 0 or step == run.steps - 1:
                     rec = {"step": step, "loss": loss, "step_s": dt}

@@ -16,12 +16,22 @@ This server replaces the wave with an **admission queue + slot rotation**:
   to an admitted tenant, and the completion records the ingress port the
   live register file assigned (a region port, or the host port when the
   tenant's chain starts on-server).  Unknown apps stay queued until a
-  ``Submit`` event lands — the control plane gates the data plane.
+  ``Submit`` event lands — the control plane gates the data plane;
+- admission prefills are **fused**: each ``step()`` issues one batched
+  prefill call per (engine, prompt-length) group instead of replaying each
+  admitted prompt token by token, then splits the batched decode state into
+  per-slot B=1 states — identical per-slot decode semantics, one dispatch;
+- every tick's decode traffic flows through a **shell-bound fabric**
+  (``shell.fabric()``): one packet per active slot to its entry port, so
+  ``port_traffic`` reads back the per-port grant counts under the *live*
+  register file — reconfigurations re-route the very next tick with zero
+  recompiles (inactive slots ride the ``dst = -1`` padding path).
 
 Engines are pluggable: ``register_model`` builds a real jitted model engine;
 tests inject lightweight fakes via ``register_engine`` (anything with
 ``prefill(prompt) -> (tok, state)`` and ``decode(tok, state) ->
-(next_tok, state)``).
+(next_tok, state)``; an optional ``prefill_batch(prompts) -> [(tok,
+state), ...]`` opts into fused admission).
 """
 from __future__ import annotations
 
@@ -56,7 +66,13 @@ class StreamCompletion:
 
 
 class ModelEngine:
-    """B=1 greedy-decode engine over a repro model (prefill by replay)."""
+    """B=1 greedy-decode engine over a repro model.
+
+    Prefill is one fused, batched call: all same-length prompts admitted on
+    a tick replay through a single jitted ``lax.scan`` over ``decode_step``
+    (B = number of admissions), and the batched decode state is split into
+    per-slot B=1 states afterwards — the per-slot decode path is unchanged.
+    """
 
     def __init__(self, cfg, *, max_len: int = 128, seed: int = 0):
         import jax
@@ -69,7 +85,14 @@ class ModelEngine:
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.key(seed))
         self._extras = extra_decode_inputs(cfg, 1, self.model.dtype)
+        self._jax = jax
         self._jnp = jnp
+        # LRU of jitted batched-replay programs, keyed by (B, S).  Bounded:
+        # arbitrary user prompt lengths must not grow compiled-program
+        # memory without limit on a long-running server.
+        self._prefill_fns: "collections.OrderedDict[Tuple[int, int], Any]" \
+            = collections.OrderedDict()
+        self._prefill_cache_max = 16
 
         def decode_one(params, state, batch_):
             return self.model.decode_step(params, state, batch_)
@@ -78,25 +101,84 @@ class ModelEngine:
 
     def _greedy(self, logits):
         from repro.runtime.serve import greedy_tokens
-        return int(greedy_tokens(logits, self.cfg.vocab)[0])
+        return [int(t) for t in np.asarray(greedy_tokens(logits,
+                                                         self.cfg.vocab))]
+
+    def _prefill_fn(self, B: int, S: int):
+        """One jitted (scan-fused) batched replay per (B, S) shape."""
+        key = (B, S)
+        fn = self._prefill_fns.get(key)
+        if fn is not None:
+            self._prefill_fns.move_to_end(key)
+        else:
+            jax, jnp = self._jax, self._jnp
+            from repro.runtime.serve import extra_decode_inputs
+            extras = extra_decode_inputs(self.cfg, B, self.model.dtype)
+
+            def replay(params, tokens):                     # tokens [B, S]
+                state = self.model.init_decode_state(B, self.max_len)
+
+                def body(st, tok_col):                      # tok_col [B]
+                    logits, st = self.model.decode_step(
+                        params, st, {"tokens": tok_col[:, None], **extras})
+                    return st, logits
+
+                state, logits_seq = jax.lax.scan(body, state,
+                                                 jnp.swapaxes(tokens, 0, 1))
+                return logits_seq[-1], state
+
+            fn = self._prefill_fns[key] = jax.jit(replay)
+            if len(self._prefill_fns) > self._prefill_cache_max:
+                self._prefill_fns.popitem(last=False)
+        return fn
+
+    def _split_state(self, state, B: int):
+        """Slice a B-batched decode state into B single-request states.
+
+        The batch axis differs per leaf (KV caches lead with it, SSM
+        states carry it second); it is recovered by diffing the abstract
+        shapes of a B-batched vs a B=1 state.
+        """
+        if B == 1:
+            return [state]
+        jax = self._jax
+        ref1 = jax.eval_shape(
+            lambda: self.model.init_decode_state(1, self.max_len))
+        refb = jax.eval_shape(
+            lambda: self.model.init_decode_state(B, self.max_len))
+
+        def slice_i(i):
+            def leaf(x, s1, sb):
+                axes = [a for a, (d1, db) in
+                        enumerate(zip(s1.shape, sb.shape)) if d1 != db]
+                if not axes:
+                    return x                                # shared (pos)
+                return jax.lax.index_in_dim(x, i, axes[0], keepdims=True)
+            return jax.tree_util.tree_map(leaf, state, ref1, refb)
+
+        return [slice_i(i) for i in range(B)]
+
+    def prefill_batch(self, prompts) -> List[Tuple[int, Any]]:
+        """Fused admission prefill for same-length prompts (one call)."""
+        B = len(prompts)
+        S = len(prompts[0])
+        assert all(len(p) == S for p in prompts), \
+            "prefill_batch groups same-length prompts"
+        tokens = np.stack([np.asarray(p, np.int32) for p in prompts])
+        logits, state = self._prefill_fn(B, S)(self.params, tokens)
+        toks = self._greedy(logits)
+        return list(zip(toks, self._split_state(state, B)))
 
     def prefill(self, prompt: np.ndarray) -> Tuple[int, Any]:
-        """Replay the prompt through decode_step; return (first_tok, state)."""
-        jnp = self._jnp
-        state = self.model.init_decode_state(1, self.max_len)
-        logits = None
-        for t in range(len(prompt)):
-            batch = {"tokens": jnp.asarray(prompt[None, t:t + 1]),
-                     **self._extras}
-            logits, state = self._decode_fn(self.params, state, batch)
-        return self._greedy(logits), state
+        """Single-prompt prefill (the B=1 case of ``prefill_batch``)."""
+        return self.prefill_batch([prompt])[0]
 
     def decode(self, tok: int, state: Any) -> Tuple[int, Any]:
         jnp = self._jnp
         batch = {"tokens": jnp.asarray([[tok]], dtype=jnp.int32),
                  **self._extras}
         logits, state = self._decode_fn(self.params, state, batch)
-        return self._greedy(logits), state
+        return self._greedy(logits)[0], state
 
 
 @dataclasses.dataclass
@@ -110,11 +192,23 @@ class _Slot:
 
 
 class ElasticServer:
-    """Admission queue + ``n_slots`` rotating decode slots over a ``Shell``."""
+    """Admission queue + ``n_slots`` rotating decode slots over a ``Shell``.
 
-    def __init__(self, shell: Shell, *, n_slots: int = 4):
+    The data plane is a shell-bound :class:`repro.fabric.Fabric`
+    (``fabric_backend`` selects its dispatch implementation): each tick the
+    active slots' tokens are planned as packets host-port -> entry-port
+    under the live register file, and the granted counts accumulate in
+    ``port_traffic`` — so a ``shell.post`` that resets or re-routes a port
+    is visible in the served traffic on the very next tick, without any
+    recompilation (``fabric.trace_count`` stays flat).
+    """
+
+    def __init__(self, shell: Shell, *, n_slots: int = 4,
+                 fabric_backend: str = "reference"):
         self.shell = shell
         self.n_slots = n_slots
+        self.fabric = shell.fabric(backend=fabric_backend)
+        self.port_traffic = np.zeros(shell.registers.n_ports, np.int64)
         self.queue: Deque[StreamRequest] = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.completions: List[StreamCompletion] = []
@@ -155,32 +249,60 @@ class ElasticServer:
 
     # ---- the server tick ----------------------------------------------
     def _admit(self) -> int:
-        """Fill free slots from the queue; shell-gated. Returns admissions."""
-        admitted = 0
+        """Fill free slots from the queue; shell-gated. Returns admissions.
+
+        Prefills are fused: one ``prefill_batch`` per (engine,
+        prompt-length) group of this tick's admissions, instead of one
+        replay per request (engines without ``prefill_batch`` fall back to
+        per-request ``prefill``)."""
+        free = [i for i, slot in enumerate(self.slots) if slot is None]
+        picked: List[Tuple[int, StreamRequest, int]] = []
         blocked: List[StreamRequest] = []
+        while free and self.queue:
+            cand = self.queue.popleft()
+            port = self.shell.route(cand.app_id)
+            if port is None:
+                # Tenant not admitted to the shell (yet): park it and try
+                # the next request — the control plane gates entry.
+                blocked.append(cand)
+                continue
+            picked.append((free.pop(0), cand, port))
+        self.queue.extendleft(reversed(blocked))
+
+        groups: Dict[Tuple[int, int], List[Tuple[int, StreamRequest, int]]]
+        groups = {}
+        for item in picked:
+            _, req, _ = item
+            groups.setdefault((req.app_id, len(req.prompt)),
+                              []).append(item)
+        for (app_id, _), items in groups.items():
+            engine = self._engines[app_id]
+            batch_fn = getattr(engine, "prefill_batch", None)
+            if batch_fn is not None:
+                results = batch_fn([req.prompt for _, req, _ in items])
+            else:
+                results = [engine.prefill(req.prompt)
+                           for _, req, _ in items]
+            for (i, req, port), (tok, state) in zip(items, results):
+                self.slots[i] = _Slot(request=req, entry_port=port,
+                                      admitted_tick=self.tick, state=state,
+                                      next_tok=tok)
+        return len(picked)
+
+    def _account_traffic(self) -> None:
+        """Plan this tick's slot->port packets through the live fabric.
+
+        One packet per slot; empty slots carry ``dst = -1`` (the padding
+        path) so the packet array shape is static across ticks — the plan
+        never retraces, only register *values* steer the grants."""
+        import jax.numpy as jnp
+        dst = np.full(self.n_slots, -1, np.int32)
         for i, slot in enumerate(self.slots):
             if slot is not None:
-                continue
-            req = None
-            while self.queue:
-                cand = self.queue.popleft()
-                port = self.shell.route(cand.app_id)
-                if port is None:
-                    # Tenant not admitted to the shell (yet): park it and
-                    # try the next request — the control plane gates entry.
-                    blocked.append(cand)
-                    continue
-                req = cand
-                break
-            if req is None:
-                break
-            tok, state = self._engines[req.app_id].prefill(req.prompt)
-            self.slots[i] = _Slot(request=req, entry_port=port,
-                                  admitted_tick=self.tick, state=state,
-                                  next_tok=tok)
-            admitted += 1
-        self.queue.extendleft(reversed(blocked))
-        return admitted
+                dst[i] = slot.entry_port
+        src = np.full(self.n_slots, self.shell.state.host_port, np.int32)
+        plan = self.fabric.plan(jnp.asarray(dst), jnp.asarray(src))
+        self.port_traffic += np.asarray(plan.counts, np.int64)
 
     def step(self) -> List[StreamCompletion]:
         """One server tick: admit, then one decode token per active slot."""
@@ -191,6 +313,8 @@ class ElasticServer:
         # admission pass gets first claim on them.
         self._stalled = (admitted == 0 and self.active_count == 0
                          and bool(self.queue))
+        if self.active_count:
+            self._account_traffic()
         finished: List[StreamCompletion] = []
         for i, slot in enumerate(self.slots):
             if slot is None:

@@ -106,6 +106,14 @@ class Shell:
         return reconfig_cost_s(fp)
 
     # ---- data-plane routing ------------------------------------------
+    def fabric(self, backend: str = "reference", **kw):
+        """A ``repro.fabric.Fabric`` bound to this shell's *live* register
+        file: every call reads the current epoch's values, so posted events
+        re-route traffic through already-compiled transfer programs (zero
+        retraces — the regression tests pin this)."""
+        from repro.fabric import fabric_for_shell
+        return fabric_for_shell(self, backend=backend, **kw)
+
     def route(self, app_id: int) -> Optional[int]:
         """Ingress port for an application id, read off the live placement:
         the first module's region port, or the host port when the chain

@@ -36,6 +36,62 @@ def test_sharded_crossbar_tests_pass_on_4_devices():
     assert "2 passed" in res.stdout, res.stdout
 
 
+def test_sharded_fabric_backend_plan_equivalent_on_4_devices():
+    """The acceptance property, third backend: the all_to_all sharded
+    fabric produces the dense oracle's DispatchPlan (keep/slot/error/
+    counts) on randomized registers, and its transfer round-trips."""
+    code = """
+import functools, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
+from repro.core.registers import CrossbarRegisters
+from repro.fabric import Fabric
+
+n, Tloc, D, cap = 4, 12, 8, 16
+mesh = jax.make_mesh((n,), ("region",))
+for seed in range(4):
+    rng = np.random.default_rng(seed)
+    regs = CrossbarRegisters(
+        dest=jnp.arange(n, dtype=jnp.int32),
+        allowed=jnp.asarray(rng.random((n, n)) > 0.25),
+        quota=jnp.asarray(rng.integers(0, 5, (n, n)), jnp.int32),
+        capacity=jnp.asarray(rng.integers(2, 14, (n,)), jnp.int32),
+        reset=jnp.asarray(rng.random(n) > 0.85),
+        error=jnp.zeros((n,), jnp.int32),
+        version=jnp.zeros((), jnp.int32))
+    dst = jnp.asarray(rng.integers(-1, n, n * Tloc), jnp.int32)
+    src = jnp.asarray(np.repeat(np.arange(n), Tloc), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((n * Tloc, D)), jnp.float32)
+    fs = Fabric(regs, backend="sharded", capacity=cap, axis_name="region")
+    fr = Fabric(regs, backend="reference", capacity=cap)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P("region"), P("region"), P("region")),
+                       out_specs=(P("region"), P("region"), P("region"),
+                                  P("region"), P(), P()))
+    def run(xs, ds, ss):
+        y, plan = fs.transfer(xs, ds, ss, apply_fn=lambda slab: slab * 2.0)
+        return y, plan.keep, plan.slot, plan.error, plan.counts, plan.drops
+
+    y, keep, slot, err, counts, drops = run(x, dst, src)
+    oracle = fr.plan(dst, src)
+    yr, _ = fr.transfer(x, dst, src, apply_fn=lambda s: s * 2.0)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(oracle.keep))
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(oracle.slot))
+    np.testing.assert_array_equal(np.asarray(err), np.asarray(oracle.error))
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(oracle.counts))
+    np.testing.assert_array_equal(np.asarray(drops), np.asarray(oracle.drops))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+print("SHARDED_FABRIC_OK")
+"""
+    res = run_with_devices(code)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "SHARDED_FABRIC_OK" in res.stdout
+
+
 def test_train_step_lowers_on_4_device_mesh():
     """build_step lowers + compiles on a (2 data x 2 model) mesh; the
     gradient all-reduce and TP collectives must partition cleanly."""

@@ -1,0 +1,303 @@
+"""repro.fabric: one data-plane API over pluggable backends.
+
+Property coverage runs on plain numpy RNG sweeps (and additionally under
+hypothesis when it is installed) so it executes everywhere the tier-1
+suite does:
+
+- the reference (dense oracle) and pallas (blockwise kernel) backends
+  produce *identical* DispatchPlans — keep/slot/error/counts/drops — on
+  randomized registers (isolation masks, quotas, resets, capacities),
+  including the padding path (``dst = -1``) and the zero-packet edge;
+- the raw Pallas plan kernel agrees with the ``wrr_dispatch_plan`` oracle
+  on its single-source slice of the same randomized registers;
+- a fabric bound to a live ``Shell`` re-routes on every posted event with
+  **zero retraces** of its compiled ``transfer`` (the paper's
+  reconfigure-without-recompile claim, pinned as a regression);
+- the MoE layer's fabric dispatch path matches the dense baseline.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.arbiter import wrr_dispatch_plan
+from repro.core.module import ModuleFootprint
+from repro.core.registers import CrossbarRegisters, ErrorCode
+from repro.fabric import (Fabric, PallasBackend, ReferenceBackend,
+                          backend_names, get_backend,
+                          register_fabric_backend)
+from repro.kernels.crossbar_dispatch.ops import crossbar_plan
+from repro.shell import FailRegion, Grow, Shell, Shrink, Submit
+
+GB = 1 << 30
+PLAN_FIELDS = ("keep", "slot", "error", "counts", "drops")
+
+
+def random_registers(rng, n, *, cap_max=20):
+    """Randomized register file: isolation, quotas, resets, capacities."""
+    return CrossbarRegisters(
+        dest=jnp.arange(n, dtype=jnp.int32),
+        allowed=jnp.asarray(rng.random((n, n)) > 0.25),
+        quota=jnp.asarray(rng.integers(0, 6, (n, n)), jnp.int32),
+        capacity=jnp.asarray(rng.integers(0, cap_max, (n,)), jnp.int32),
+        reset=jnp.asarray(rng.random(n) > 0.85),
+        error=jnp.zeros((n,), jnp.int32),
+        version=jnp.zeros((), jnp.int32))
+
+
+def assert_plans_equal(a, b, msg=""):
+    for f in PLAN_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg} field {f}")
+
+
+# ----------------------------------------------------------------------
+# backend equivalence: reference oracle vs pallas kernels
+# ----------------------------------------------------------------------
+class TestBackendEquivalence:
+    def check(self, seed, T, n, with_padding=True):
+        rng = np.random.default_rng(seed)
+        regs = random_registers(rng, n)
+        lo = -1 if with_padding else 0
+        dst = jnp.asarray(rng.integers(lo, n, T), jnp.int32)
+        src = jnp.asarray(rng.integers(0, n, T), jnp.int32)
+        cap = int(rng.integers(4, 40))
+        fr = Fabric(regs, backend="reference", capacity=cap)
+        fp = Fabric(regs, backend="pallas", capacity=cap)
+        pr, pp = fr.plan(dst, src), fp.plan(dst, src)
+        assert_plans_equal(pr, pp, f"seed={seed} T={T} n={n}")
+        if T:
+            x = jnp.asarray(rng.standard_normal((T, 16)), jnp.float32)
+            w = jnp.asarray(rng.random(T), jnp.float32)
+            yr, _ = fr.transfer(x, dst, src, weights=w)
+            yp, _ = fp.transfer(x, dst, src, weights=w)
+            np.testing.assert_allclose(np.asarray(yr), np.asarray(yp),
+                                       atol=1e-5)
+
+    def test_randomized_registers_sweep(self):
+        """Property-style numpy sweep: runs with or without hypothesis."""
+        rng = np.random.default_rng(0)
+        for seed in range(12):
+            n = int(rng.integers(2, 9))
+            T = int(rng.choice([1, 7, 64, 130]))
+            self.check(seed, T, n)
+
+    def test_zero_packet_round(self):
+        self.check(seed=1, T=0, n=4)
+
+    def test_padding_only_batch_drops_everything(self):
+        regs = CrossbarRegisters.create(4, capacity=8)
+        dst = jnp.full((16,), -1, jnp.int32)
+        src = jnp.zeros((16,), jnp.int32)
+        for backend in ("reference", "pallas"):
+            plan = Fabric(regs, backend=backend, capacity=8).plan(dst, src)
+            assert not np.asarray(plan.keep).any()
+            assert (np.asarray(plan.error)
+                    == ErrorCode.INVALID_DEST).all(), backend
+            assert np.asarray(plan.counts).sum() == 0
+
+    def test_wrr_interleave_matches_across_backends(self):
+        """Multi-source WRR: the composed pallas slots reproduce the
+        oracle's round-robin interleave exactly."""
+        regs = CrossbarRegisters.create(4, capacity=32)
+        dst = jnp.asarray([3] * 6, jnp.int32)
+        src = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+        slots = {}
+        for backend in ("reference", "pallas"):
+            plan = Fabric(regs, backend=backend, capacity=32).plan(dst, src)
+            slots[backend] = np.asarray(plan.slot).tolist()
+        assert slots["reference"] == slots["pallas"] == [0, 2, 4, 1, 3, 5]
+
+    if HAVE_HYPOTHESIS:
+        @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 80),
+               st.integers(2, 8))
+        @settings(max_examples=40, deadline=None)
+        def test_hypothesis_randomized_registers(self, seed, T, n):
+            self.check(seed, T, n)
+    else:
+        def test_hypothesis_randomized_registers(self):
+            pytest.importorskip("hypothesis")
+
+
+# ----------------------------------------------------------------------
+# satellite: raw Pallas plan kernel vs the dense oracle (single source)
+# ----------------------------------------------------------------------
+class TestKernelVsOracle:
+    def check(self, seed, T, n):
+        rng = np.random.default_rng(seed)
+        regs = random_registers(rng, n)
+        # no resets on this path: the raw kernel rows don't encode them
+        regs = dataclasses.replace(regs, reset=jnp.zeros((n,), bool))
+        s = int(rng.integers(0, n))
+        dst = jnp.asarray(rng.integers(-1, n, T), jnp.int32)
+        keep_k, slot_k, err_k, counts_k = crossbar_plan(
+            dst, regs.allowed[s].astype(jnp.int32), regs.quota[:, s],
+            regs.capacity)
+        oracle = wrr_dispatch_plan(dst, jnp.full((T,), s, jnp.int32), regs)
+        np.testing.assert_array_equal(np.asarray(keep_k) > 0,
+                                      np.asarray(oracle.keep))
+        np.testing.assert_array_equal(np.asarray(slot_k),
+                                      np.asarray(oracle.slot))
+        np.testing.assert_array_equal(np.asarray(err_k),
+                                      np.asarray(oracle.error))
+        np.testing.assert_array_equal(np.asarray(counts_k),
+                                      np.asarray(oracle.counts))
+
+    def test_single_source_slice_matches_oracle_sweep(self):
+        """Isolation / quota / capacity / padding, randomized."""
+        for seed in range(10):
+            self.check(seed, T=int(np.random.default_rng(seed)
+                                   .choice([1, 33, 90])), n=6)
+
+    def test_zero_packet_kernel_call(self):
+        keep, slot, err, counts = crossbar_plan(
+            jnp.zeros((0,), jnp.int32), jnp.ones((4,), jnp.int32),
+            jnp.zeros((4,), jnp.int32), jnp.full((4,), 8, jnp.int32))
+        assert keep.shape == slot.shape == err.shape == (0,)
+        assert np.asarray(counts).sum() == 0
+
+    if HAVE_HYPOTHESIS:
+        @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 100),
+               st.integers(2, 8))
+        @settings(max_examples=40, deadline=None)
+        def test_hypothesis_kernel_vs_oracle(self, seed, T, n):
+            self.check(seed, T, n)
+    else:
+        def test_hypothesis_kernel_vs_oracle(self):
+            pytest.importorskip("hypothesis")
+
+
+# ----------------------------------------------------------------------
+# epoch awareness: shell-bound fabric, zero retraces across reconfigs
+# ----------------------------------------------------------------------
+def fp(gb=1):
+    return ModuleFootprint(param_bytes=gb * GB, flops_per_token=1e9,
+                           activation_bytes_per_token=4096)
+
+
+def make_shell(n=4):
+    from repro.core.elastic import Region
+    return Shell([Region(rid=i, n_chips=16, hbm_bytes=16 * GB)
+                  for i in range(n)])
+
+
+class TestShellBoundFabric:
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_reconfiguration_is_retrace_free(self, backend):
+        """The acceptance regression: register rewrites via Shell.post
+        re-route Fabric.transfer with zero recompiles."""
+        shell = make_shell()
+        shell.submit("a", [fp(4), fp(4)], app_id=0)
+        fabric = shell.fabric(backend=backend)
+        n = fabric.n_ports
+        T = 16
+        dst = jnp.asarray(np.arange(T) % n, jnp.int32)
+        src = jnp.full((T,), shell.state.host_port, jnp.int32)
+        x = jnp.ones((T, 8), jnp.float32)
+
+        y0, plan0 = fabric.transfer(x, dst, src)
+        assert fabric.trace_count == 1
+        epoch0 = fabric.epoch
+
+        shell.post(Submit(tenant="b", footprints=(fp(2),), app_id=1))
+        shell.post(Shrink(tenant="a", n_regions=1))
+        shell.post(Grow(tenant="a", n_regions=2))
+        shell.post(FailRegion(rid=2))            # port 3 held in reset
+
+        y1, plan1 = fabric.transfer(x, dst, src)
+        assert fabric.epoch == epoch0 + 4        # live register view
+        assert fabric.trace_count == 1, \
+            f"reconfiguration retraced transfer: {fabric.trace_counts}"
+        # The failed region's port makes no grants any more.
+        port = 3
+        mask = np.asarray(dst) == port
+        assert np.asarray(plan0.keep)[mask].all()
+        assert not np.asarray(plan1.keep)[mask].any()
+        assert (np.asarray(plan1.error)[mask]
+                == ErrorCode.INVALID_DEST).all()
+        # Un-routed packets return zeros, routed ones round-trip.
+        np.testing.assert_allclose(np.asarray(y1)[mask], 0.0)
+
+    def test_plan_dispatch_combine_share_the_no_retrace_contract(self):
+        shell = make_shell()
+        shell.submit("a", [fp()], app_id=0)
+        fabric = shell.fabric()
+        dst = jnp.zeros((8,), jnp.int32)
+        src = jnp.zeros((8,), jnp.int32)
+        x = jnp.ones((8, 4))
+        for _ in range(3):
+            slabs, plan = fabric.dispatch(x, dst, src)
+            fabric.combine(slabs, plan)
+            fabric.plan(dst, src)
+            shell.post(FailRegion(rid=0))
+            shell.post(Grow(tenant="a"))
+        assert fabric.trace_counts["plan"] == 1
+        assert fabric.trace_counts["dispatch"] == 1
+        assert fabric.trace_counts["combine"] == 1
+
+    def test_capacity_clamp_keeps_slabs_in_shape(self):
+        """Register capacity above the static slab depth must not grant
+        into slots that don't exist."""
+        regs = CrossbarRegisters.create(2, capacity=64)
+        fabric = Fabric(regs, backend="reference", capacity=4)
+        dst = jnp.zeros((10,), jnp.int32)
+        src = jnp.zeros((10,), jnp.int32)
+        plan = fabric.plan(dst, src)
+        assert int(plan.keep.sum()) == 4
+        assert int(np.asarray(plan.slot).max()) == 3
+
+    def test_backend_registry(self):
+        assert {"reference", "pallas", "sharded"} <= set(backend_names())
+        assert isinstance(get_backend("reference"), ReferenceBackend)
+        inst = PallasBackend(block_t=128)
+        assert get_backend(inst) is inst
+        with pytest.raises(ValueError):
+            get_backend("smoke-signals")
+        register_fabric_backend("custom-ref", ReferenceBackend)
+        assert isinstance(get_backend("custom-ref"), ReferenceBackend)
+
+
+# ----------------------------------------------------------------------
+# consumers: the MoE layer through the fabric
+# ----------------------------------------------------------------------
+class TestMoEFabricDispatch:
+    def setup_method(self, _):
+        from repro.models.common import init_params
+        from repro.models.config import MoEConfig
+        from repro.models.moe import moe_defs
+        self.moe = MoEConfig(n_experts=4, top_k=2, capacity_factor=1.0)
+        defs = moe_defs(32, 64, self.moe, "swiglu")
+        self.params = init_params(defs, jax.random.key(0), jnp.float32)
+        self.x = jax.random.normal(jax.random.key(1), (2, 32, 32))
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_fabric_dispatch_matches_dense_baseline(self, backend):
+        from repro.models.moe import moe_apply
+        yd, sd = moe_apply(self.params, self.x, self.moe, "swiglu",
+                           group_size=64)
+        yf, sf = moe_apply(self.params, self.x, self.moe, "swiglu",
+                           group_size=64, dispatch_impl=backend)
+        np.testing.assert_allclose(np.asarray(yd), np.asarray(yf),
+                                   atol=2e-5, rtol=2e-5)
+        assert int(sd["dropped"]) == int(sf["dropped"])
+        np.testing.assert_allclose(float(sd["aux_loss"]),
+                                   float(sf["aux_loss"]), rtol=1e-5)
+
+    def test_fabric_dispatch_respects_isolation_mask(self):
+        from repro.models.moe import moe_apply
+        mask = jnp.asarray([True, True, True, False])
+        y, stats = moe_apply(self.params, self.x, self.moe, "swiglu",
+                             group_size=64, expert_mask=mask,
+                             dispatch_impl="reference")
+        assert y.shape == self.x.shape
+        assert not bool(jnp.isnan(y).any())
+        assert int(stats["iso_dropped"]) == 0    # router never picks masked

@@ -340,6 +340,64 @@ class TestEventWiring:
         assert shell.placement_of("a")[1] == ON_SERVER   # demoted
         shell.verify()
 
+    def test_straggler_stats_post_watchdog_timeout(self):
+        """Satellite: persistent stragglers emit WatchdogTimeout through
+        the shell (previously poll-only) — once per streak, demoting the
+        straggling region's module."""
+        from repro.runtime.ft import StragglerStats
+        shell = make_shell(n=3)
+        shell.submit("a", [fp(), fp(), fp()])
+        stats = StragglerStats([0, 1, 2], threshold=1.5, patience=2,
+                               shell=shell)
+        for _ in range(2):
+            stats.record(0, 0.01)
+            stats.record(1, 0.01)
+            stats.record(2, 0.5)                 # persistent straggler
+            stats.sweep(step=7)
+        timeouts = [e.event for e in shell.log
+                    if isinstance(e.event, WatchdogTimeout)]
+        assert len(timeouts) == 1                # once per streak
+        assert timeouts[0].region == 2 and timeouts[0].step == 7
+        assert not shell.state.region(2).healthy
+        assert shell.placement_of("a")[2] == ON_SERVER
+        # more sweeps while still flagged: no duplicate posts
+        stats.record(2, 0.5)
+        stats.sweep(step=8)
+        assert sum(isinstance(e.event, WatchdogTimeout)
+                   for e in shell.log) == 1
+        # recovery (EWMA decays back under threshold) clears the streak
+        for _ in range(20):
+            stats.record(2, 0.01)
+        assert stats.sweep(step=9) == []
+        assert 2 not in stats._reported
+        shell.verify()
+
+    def test_train_loop_wires_straggler_stats(self):
+        """TrainLoop records its region into shared StragglerStats and
+        sweeps each step, so a slow loop demotes itself via the shell."""
+        from repro.configs import get_config
+        from repro.runtime.ft import StragglerStats
+        from repro.runtime.train import TrainLoop, TrainLoopConfig
+        shell = make_shell(n=3)
+        shell.submit("a", [fp(), fp(), fp()])
+        stats = StragglerStats([0, 1, 2], threshold=1.5, patience=1)
+        # fleet peers report fast steps; this loop's region will straggle
+        for _ in range(3):
+            stats.record(1, 1e-4)
+            stats.record(2, 1e-4)
+        loop = TrainLoop(get_config("tinyllama_1_1b", smoke=True),
+                         TrainLoopConfig(steps=2, global_batch=2,
+                                         seq_len=16, log_every=1),
+                         shell=shell, region=0, straggler_stats=stats)
+        assert stats.shell is shell              # auto-attached
+        loop.run_loop()
+        assert stats.ewma[0] is not None         # loop recorded its region
+        timeouts = [e.event for e in shell.log
+                    if isinstance(e.event, WatchdogTimeout)]
+        assert timeouts and timeouts[0].region == 0
+        assert not shell.state.region(0).healthy
+        shell.verify()
+
 
 # ----------------------------------------------------------------------
 # ElasticServer: continuous batching over the shell
@@ -356,6 +414,20 @@ class _FakeEngine:
 
     def decode(self, tok, state):
         return tok + 1, state
+
+
+class _FakeBatchEngine(_FakeEngine):
+    """Fake with fused admission: counts batched prefill *calls*."""
+
+    def __init__(self):
+        super().__init__()
+        self.batch_calls = 0
+        self.batch_sizes = []
+
+    def prefill_batch(self, prompts):
+        self.batch_calls += 1
+        self.batch_sizes.append(len(prompts))
+        return [(int(p[-1]) + 1, None) for p in prompts]
 
 
 def _req(app_id, start, max_new):
@@ -453,6 +525,82 @@ class TestElasticServer:
         server.submit(_req(1, start=2, max_new=1))
         (comp,) = server.run()
         assert comp.entry_port == 0         # host bridge
+
+    def test_admission_prefill_is_batched_per_step(self):
+        """Satellite: same-length admissions on one tick fuse into a
+        single prefill_batch call; decode semantics stay per-slot."""
+        shell = make_shell()
+        shell.submit("a", [fp(), fp()], app_id=0)
+        server = ElasticServer(shell, n_slots=3)
+        engine = _FakeBatchEngine()
+        server.register_engine(0, engine)
+        rids = [server.submit(_req(0, start=10 * (i + 1), max_new=3))
+                for i in range(3)]
+        server.step()                       # all three admitted together
+        assert engine.batch_calls == 1 and engine.batch_sizes == [3]
+        comps = {c.rid: c for c in server.run()}
+        assert set(comps) == set(rids)
+        assert comps[rids[1]].tokens == [21, 22, 23]   # per-slot decode
+
+    def test_admission_groups_by_prompt_length(self):
+        """Mixed-length admissions fuse per length group (state batching
+        needs a shared scalar position)."""
+        shell = make_shell()
+        shell.submit("a", [fp(), fp()], app_id=0)
+        server = ElasticServer(shell, n_slots=4)
+        engine = _FakeBatchEngine()
+        server.register_engine(0, engine)
+        for start, plen in ((1, 2), (5, 2), (9, 1)):
+            server.submit(StreamRequest(
+                app_id=0, prompt=np.arange(start, start + plen, dtype=np.int32),
+                max_new=1))
+        server.step()
+        assert engine.batch_calls == 2
+        assert sorted(engine.batch_sizes) == [1, 2]
+
+    def test_engines_without_prefill_batch_still_admit(self):
+        _, server = self.make(n_slots=2)
+        r0 = server.submit(_req(0, start=1, max_new=1))
+        r1 = server.submit(_req(0, start=3, max_new=1))
+        comps = {c.rid: c for c in server.run()}
+        assert comps[r0].tokens == [2] and comps[r1].tokens == [4]
+
+    def test_model_engine_batched_prefill_matches_sequential(self):
+        """The fused (scan + batched) ModelEngine prefill produces the
+        same first token and per-slot decode stream as one-at-a-time
+        replay."""
+        from repro.configs import get_config
+        from repro.shell.server import ModelEngine
+        cfg = get_config("tinyllama_1_1b", smoke=True)
+        engine = ModelEngine(cfg, max_len=32, seed=0)
+        prompts = [np.array([3, 1, 4], np.int32),
+                   np.array([1, 5, 9], np.int32)]
+        fused = engine.prefill_batch(prompts)
+        for prompt, (tok_b, state_b) in zip(prompts, fused):
+            tok_s, state_s = engine.prefill(prompt)
+            assert tok_s == tok_b
+            # two further decode steps agree token-for-token
+            tb, ts, sb, ss = tok_b, tok_s, state_b, state_s
+            for _ in range(2):
+                tb, sb = engine.decode(tb, sb)
+                ts, ss = engine.decode(ts, ss)
+                assert tb == ts
+
+    def test_port_traffic_follows_reconfiguration(self):
+        """The server's data plane is a shell-bound fabric: traffic counts
+        land on entry ports under the live registers, and a failed region
+        stops granting on the very next tick with zero fabric retraces."""
+        shell, server = self.make(n_slots=2)
+        r0 = server.submit(_req(0, start=1, max_new=6))
+        server.step()
+        assert server.port_traffic[1] == 1        # app 0 enters at port 1
+        traces = server.fabric.trace_count
+        shell.fail_region(0)                      # port 1 held in reset
+        server.step()
+        assert server.port_traffic[1] == 1        # no further grants
+        assert server.fabric.trace_count == traces
+        server.run()
+        assert any(c.rid == r0 for c in server.completions)
 
 
 # ----------------------------------------------------------------------
