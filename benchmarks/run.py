@@ -11,6 +11,7 @@ import sys
 from pathlib import Path
 
 from benchmarks.fabric_bench import bench_fabric
+from benchmarks.manager_bench import bench_manager
 from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
                                      bench_fig5_elasticity,
                                      bench_fig6_scaling, bench_kernels_cpu,
@@ -26,12 +27,15 @@ BENCHES = {
     "area": ("Tables I/II — area & power", bench_area),
     "kernels": ("kernel microbenchmarks (CPU)", bench_kernels_cpu),
     "fabric": ("repro.fabric — backend comparison", bench_fabric),
+    "manager": ("repro.manager — closed-loop autoscaling scenarios",
+                bench_manager),
     "roofline": ("§Roofline — dry-run aggregation", bench_roofline),
 }
 
 # Stable, machine-readable perf trajectory: one schema-versioned file per
 # tracked bench, overwritten in place so successive PRs diff cleanly.
-TRAJECTORY_FILES = {"fabric": "BENCH_fabric.json"}
+TRAJECTORY_FILES = {"fabric": "BENCH_fabric.json",
+                    "manager": "BENCH_manager.json"}
 
 
 def main(argv=None) -> int:

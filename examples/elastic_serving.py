@@ -8,10 +8,12 @@ streams with continuous batching — new requests are admitted into freed
 decode slots while earlier ones are still mid-stream, with admission routed
 by ``app_id`` through the shell's register file.
 
-Control-plane script: submit A and B -> A shrinks (B's waiter promoted) ->
-a region fails via stale heartbeat (module demoted, port held in reset) ->
-heal (promoted back) -> A releases.  After every event the delta-synthesised
-register file is checked bit-identical to a full rebuild (``shell.verify``).
+Control-plane script: submit A and B -> the **resource manager** rebalances
+them (no manual ``Shrink``: a ``Manager`` tick reads telemetry and posts
+the events itself) -> a region fails via stale heartbeat (module demoted,
+port held in reset) -> heal (promoted back) -> A releases.  After every
+event the delta-synthesised register file is checked bit-identical to a
+full rebuild (``shell.verify``).
 
     PYTHONPATH=src python examples/elastic_serving.py
 """
@@ -19,8 +21,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.module import ModuleFootprint
+from repro.manager import FairShare, Manager
 from repro.runtime.ft import HeartbeatMonitor
-from repro.shell import ON_SERVER, Shell, Shrink, Submit
+from repro.shell import ON_SERVER, Shell, Submit
 from repro.shell.server import ElasticServer, StreamRequest
 
 GB = 1 << 30
@@ -45,7 +48,9 @@ def main():
     from repro.core.elastic import Region
     shell = Shell([Region(rid=i, n_chips=64, hbm_bytes=16 * GB)
                    for i in range(4)], policy="first_fit")
-    monitor = HeartbeatMonitor([0, 1, 2, 3], timeout_s=10.0, shell=shell)
+    # Region ids derive live from the shell's pool — no static list to
+    # go stale when the pool reconfigures.
+    monitor = HeartbeatMonitor(timeout_s=10.0, shell=shell)
 
     fp = lambda gb: ModuleFootprint(param_bytes=gb * GB,
                                     flops_per_token=2e9,
@@ -92,9 +97,19 @@ def main():
     print(f"   per-port fabric grants: {server.port_traffic.tolist()}  "
           f"(fabric retraces: {server.fabric.trace_count})")
 
-    # --- elasticity: A shrinks, B grows (§IV-A promote path).
-    shell.post(Shrink(tenant="tenant_a", n_regions=2))
-    show(shell, "A shrinks to 2 regions -> B's module promoted")
+    # --- elasticity, closed-loop: no manual Shrink/Grow.  The resource
+    # manager samples telemetry (queue/slots/traffic via the server's
+    # probe) and FairShare computes the weighted max-min allocation:
+    # 4 healthy regions, A requests 3, B requests 2 -> 2 + 2, so the
+    # manager posts Shrink(A, 2) and Grow(B, 2) itself (§IV-A promote
+    # path, driven from Signals alone).
+    manager = Manager(shell, policy=FairShare(), probes=[server.probe()])
+    decision = manager.tick()
+    print(f"\n   manager decided: {list(decision.kinds())} from "
+          f"free={decision.signals.free_regions}, "
+          f"requested/granted="
+          f"{[(t.name, t.requested, t.granted) for t in decision.signals.tenants]}")
+    show(shell, "manager rebalanced: A -> 2 regions, B's waiter promoted")
 
     # --- failure: region 2 misses heartbeats; the monitor POSTS the event.
     for healthy in (0, 1, 3):

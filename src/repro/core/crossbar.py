@@ -21,6 +21,7 @@ registers — never by recompiling the tenant program.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -28,6 +29,12 @@ import jax.numpy as jnp
 
 from repro.core.arbiter import DispatchPlan
 from repro.core.registers import CrossbarRegisters, ErrorCode
+
+
+def _warn_deprecated(what: str, use: str) -> None:
+    warnings.warn(f"DEPRECATED {what} — migrate to {use} "
+                  f"(see ROADMAP.md, repro.fabric)", DeprecationWarning,
+                  stacklevel=3)
 
 
 def _axis_size(axis_name: str) -> int:
@@ -49,6 +56,9 @@ def exchange_local(x: jax.Array, dst: jax.Array, src: jax.Array,
     Deprecated: ``Fabric(regs, backend="reference",
     capacity=capacity).dispatch(x, dst, src)`` is the maintained spelling.
     """
+    _warn_deprecated("core.crossbar.exchange_local",
+                     'Fabric(regs, backend="reference", capacity=C)'
+                     '.dispatch(x, dst, src)')
     from repro.fabric.backends import ReferenceBackend
     backend = ReferenceBackend()
     plan = backend.plan(dst, src, regs)
@@ -58,6 +68,7 @@ def exchange_local(x: jax.Array, dst: jax.Array, src: jax.Array,
 def combine_local(y: jax.Array, plan: DispatchPlan,
                   weights: Optional[jax.Array] = None) -> jax.Array:
     """Deprecated: use ``Fabric.combine``."""
+    _warn_deprecated("core.crossbar.combine_local", "Fabric.combine(y, plan)")
     from repro.fabric.backends import ReferenceBackend
     if weights is None:
         weights = jnp.ones_like(plan.keep, dtype=y.dtype)
@@ -104,6 +115,9 @@ def exchange_sharded(x: jax.Array, dst: jax.Array, regs: CrossbarRegisters,
     keep [T_local], slot [T_local]) where recv[i] holds what region ``i`` sent
     here. Reading recv as [capacity, n] (slot-major) is the WRR service order.
     """
+    _warn_deprecated("core.crossbar.exchange_sharded",
+                     'Fabric(regs, backend="sharded", axis_name=...)'
+                     ".dispatch inside shard_map (oracle-identical slots)")
     n = _axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     keep, slot, _err = pairwise_dispatch_plan(dst, me, regs, capacity)
@@ -126,6 +140,9 @@ def combine_sharded(y: jax.Array, dst: jax.Array, keep: jax.Array,
                     slot: jax.Array, weights: jax.Array, capacity: int,
                     axis_name: str) -> jax.Array:
     """Inverse of :func:`exchange_sharded`: bring results home and weight them."""
+    _warn_deprecated("core.crossbar.combine_sharded",
+                     'Fabric(regs, backend="sharded", axis_name=...)'
+                     ".combine inside shard_map")
     n = _axis_size(axis_name)
     back = jax.lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0,
                               tiled=False)                     # [n, cap, D]

@@ -109,7 +109,7 @@ class PallasBackend:
 
     def plan(self, dst: jax.Array, src: jax.Array,
              regs: CrossbarRegisters) -> DispatchPlan:
-        from repro.kernels.crossbar_dispatch.ops import crossbar_plan
+        from repro.kernels.crossbar_dispatch.ops import _plan as kernel_plan
         n = regs.n_ports
         T = dst.shape[0]
         if T == 0:
@@ -127,7 +127,7 @@ class PallasBackend:
         nocap = jnp.full((n,), jnp.int32(T + 1))
         keeps, ranks, errs, cnts = [], [], [], []
         for s in range(n):
-            k, r, e, c = crossbar_plan(
+            k, r, e, c = kernel_plan(
                 jnp.where(src == s, dst, -1), allowed_eff[s],
                 regs.quota[:, s], nocap, block_t=self.block_t,
                 interpret=self.interpret)
@@ -152,18 +152,20 @@ class PallasBackend:
 
     def dispatch(self, x: jax.Array, plan: DispatchPlan,
                  regs: CrossbarRegisters, capacity: int) -> jax.Array:
-        from repro.kernels.crossbar_dispatch.ops import crossbar_dispatch
-        return crossbar_dispatch(x, plan.dst, plan.keep.astype(jnp.int32),
-                                 plan.slot, n_ports=regs.n_ports,
-                                 capacity=capacity, block_t=self.block_t,
-                                 interpret=self.interpret)
+        from repro.kernels.crossbar_dispatch.ops import \
+            _dispatch as kernel_dispatch
+        return kernel_dispatch(x, plan.dst, plan.keep.astype(jnp.int32),
+                               plan.slot, n_ports=regs.n_ports,
+                               capacity=capacity, block_t=self.block_t,
+                               interpret=self.interpret)
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
                 weights: jax.Array) -> jax.Array:
-        from repro.kernels.crossbar_dispatch.ops import crossbar_combine
-        return crossbar_combine(y, plan.dst, plan.keep.astype(jnp.int32),
-                                plan.slot, weights, block_t=self.block_t,
-                                interpret=self.interpret)
+        from repro.kernels.crossbar_dispatch.ops import \
+            _combine as kernel_combine
+        return kernel_combine(y, plan.dst, plan.keep.astype(jnp.int32),
+                              plan.slot, weights, block_t=self.block_t,
+                              interpret=self.interpret)
 
 
 # ----------------------------------------------------------------------

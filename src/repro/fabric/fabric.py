@@ -106,6 +106,12 @@ class Fabric:
     def trace_counts(self):
         return dict(self._trace_counts)
 
+    def probe(self):
+        """A ``repro.manager`` telemetry probe over this fabric (epoch +
+        retrace counters — the manager's zero-recompile regression signal)."""
+        from repro.manager.telemetry import FabricProbe
+        return FabricProbe(self)
+
     def _gated(self, regs: CrossbarRegisters) -> CrossbarRegisters:
         """Register capacities clamped to the static slab depth, so every
         backend grants into slots that exist."""

@@ -4,8 +4,10 @@ These are the *single-source-region* kernels: ``dst`` plus raw register
 rows for one master port.  New code should go through
 ``repro.fabric.Fabric(..., backend="pallas")``, which composes these into
 the full multi-source WRR plan, tracks register epochs, and stays
-plan-equivalent with the dense oracle; the functions here remain as thin
-shims for existing callers and the kernel-vs-oracle test sweeps.
+plan-equivalent with the dense oracle; the **public** functions here are
+deprecated shims (they warn) kept for existing callers and the
+kernel-vs-oracle test sweeps — ``PallasBackend`` calls the private
+``_plan``/``_dispatch``/``_combine`` impls directly.
 
 Handles token padding (to the block size), the zero-packet edge case, and
 backend selection (interpret=True off-TPU). Padding tokens are tagged
@@ -15,12 +17,20 @@ special-casing downstream.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.crossbar_dispatch import kernel as _k
+
+
+def _warn_deprecated(what: str) -> None:
+    warnings.warn(
+        f"DEPRECATED {what} — migrate to repro.fabric.Fabric(regs, "
+        f'backend="pallas") (multi-source WRR composition, epoch tracking, '
+        f"oracle-equivalent plans)", DeprecationWarning, stacklevel=3)
 
 
 def _should_interpret() -> bool:
@@ -36,9 +46,9 @@ def _pad_tokens(arr: jax.Array, block_t: int, fill) -> Tuple[jax.Array, int]:
     return arr, T
 
 
-def crossbar_plan(dst: jax.Array, allowed_row: jax.Array,
-                  quota_row: jax.Array, capacity: jax.Array, *,
-                  block_t: int = 256, interpret: bool | None = None):
+def _plan(dst: jax.Array, allowed_row: jax.Array,
+          quota_row: jax.Array, capacity: jax.Array, *,
+          block_t: int = 256, interpret: bool | None = None):
     """Grant decisions for one source region's packets.
 
     dst [T] int32; register rows [S]. Returns (keep, slot, err, counts).
@@ -58,10 +68,10 @@ def crossbar_plan(dst: jax.Array, allowed_row: jax.Array,
     return keep[:T], slot[:T], err[:T], counts
 
 
-def crossbar_dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
-                      slot: jax.Array, *, n_ports: int, capacity: int,
-                      block_t: int = 256,
-                      interpret: bool | None = None) -> jax.Array:
+def _dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
+              slot: jax.Array, *, n_ports: int, capacity: int,
+              block_t: int = 256,
+              interpret: bool | None = None) -> jax.Array:
     """Pack granted packets [T, D] into slabs [n_ports, capacity, D]."""
     if interpret is None:
         interpret = _should_interpret()
@@ -77,10 +87,10 @@ def crossbar_dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
                            interpret=interpret)
 
 
-def crossbar_combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
-                     slot: jax.Array, weights: jax.Array, *,
-                     block_t: int = 256,
-                     interpret: bool | None = None) -> jax.Array:
+def _combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
+             slot: jax.Array, weights: jax.Array, *,
+             block_t: int = 256,
+             interpret: bool | None = None) -> jax.Array:
     """Gather slabs [S, C, D] back to packets [T, D], weighted."""
     if interpret is None:
         interpret = _should_interpret()
@@ -95,3 +105,30 @@ def crossbar_combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
     out = _k.combine_call(y, dstp, keepp, slotp, wp, block_t=block_t,
                           interpret=interpret)
     return out[:T]
+
+
+# ----------------------------------------------------------------------
+# deprecated public entry points (thin warning shims over the impls)
+# ----------------------------------------------------------------------
+def crossbar_plan(dst, allowed_row, quota_row, capacity, *,
+                  block_t: int = 256, interpret: bool | None = None):
+    """Deprecated: single-source plan shim (see module docstring)."""
+    _warn_deprecated("kernels.crossbar_dispatch.crossbar_plan")
+    return _plan(dst, allowed_row, quota_row, capacity, block_t=block_t,
+                 interpret=interpret)
+
+
+def crossbar_dispatch(x, dst, keep, slot, *, n_ports: int, capacity: int,
+                      block_t: int = 256, interpret: bool | None = None):
+    """Deprecated: raw scatter shim (see module docstring)."""
+    _warn_deprecated("kernels.crossbar_dispatch.crossbar_dispatch")
+    return _dispatch(x, dst, keep, slot, n_ports=n_ports, capacity=capacity,
+                     block_t=block_t, interpret=interpret)
+
+
+def crossbar_combine(y, dst, keep, slot, weights, *,
+                     block_t: int = 256, interpret: bool | None = None):
+    """Deprecated: raw gather shim (see module docstring)."""
+    _warn_deprecated("kernels.crossbar_dispatch.crossbar_combine")
+    return _combine(y, dst, keep, slot, weights, block_t=block_t,
+                    interpret=interpret)

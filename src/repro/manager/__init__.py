@@ -1,0 +1,54 @@
+"""``repro.manager`` — the closed-loop elastic resource manager (PR 3).
+
+The paper's envisioned manager "can increase or decrease the number of PR
+regions allocated to an application based on its acceleration requirements
+and PR regions' availability".  PR 1/2 built the mechanisms (event-driven
+shell, register-gated fabric); this package is the policy loop that drives
+them autonomously:
+
+- ``repro.manager.telemetry`` — ``Signals``: one typed snapshot per tick,
+  assembled from pluggable ``Probe`` sources (``server.probe()``,
+  ``stats.probe()``, ``fabric.probe()``) — replaces ad-hoc attribute reads.
+- ``repro.manager.policies``  — ``ElasticityPolicy`` seam + built-ins:
+  ``Hysteresis`` (pressure/idleness with cooldowns),
+  ``TrafficAwareDefrag`` (port-traffic-ranked migration and shrink
+  victims), ``FairShare`` (weighted max-min region allocation),
+  ``PolicyChain`` (composition).
+- ``repro.manager.manager``   — the tick-driven ``Manager`` loop
+  (sample -> decide -> ``shell.post`` -> record).
+- ``repro.manager.scenarios`` — seeded, deterministic workload scenarios
+  (bursty / diurnal / churn / failure_storm) stepping workload + server +
+  manager together; powers the property tests and ``BENCH_manager.json``.
+"""
+from repro.manager.manager import Decision, Manager
+from repro.manager.policies import (ElasticityPolicy, FairShare, Hysteresis,
+                                    PolicyChain, TrafficAwareDefrag,
+                                    get_elasticity_policy,
+                                    register_elasticity_policy)
+from repro.manager.telemetry import (FabricProbe, Probe, ServerProbe,
+                                     Signals, StragglerProbe, TenantSignals,
+                                     assemble_signals, fragmentation)
+
+__all__ = [
+    "Manager", "Decision",
+    "ElasticityPolicy", "Hysteresis", "TrafficAwareDefrag", "FairShare",
+    "PolicyChain", "get_elasticity_policy", "register_elasticity_policy",
+    "Signals", "TenantSignals", "Probe", "ServerProbe", "StragglerProbe",
+    "FabricProbe", "assemble_signals", "fragmentation",
+    # lazily resolved (pulls numpy/server machinery): scenario harness
+    "run_scenario", "ScenarioResult", "ScenarioSpec", "TenantSpec",
+    "SyntheticEngine", "SCENARIO_KINDS", "default_policy",
+]
+
+_SCENARIO_NAMES = {"run_scenario", "ScenarioResult", "ScenarioSpec",
+                   "TenantSpec", "SyntheticEngine", "SCENARIO_KINDS",
+                   "default_policy"}
+
+
+def __getattr__(name):
+    # PEP 562: the scenario harness imports the serving stack; keep
+    # `import repro.manager` light for policy/telemetry-only users.
+    if name in _SCENARIO_NAMES:
+        from repro.manager import scenarios
+        return getattr(scenarios, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

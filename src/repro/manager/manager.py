@@ -1,0 +1,148 @@
+"""``Manager`` — the closed loop over ``Shell.post``.
+
+PR 1 made reconfiguration event-driven and PR 2 made the data plane re-read
+registers at call time; what remained manual was *deciding*: every ``Grow``
+or ``Shrink`` in the examples was hand-posted.  The manager closes the loop:
+
+    manager = Manager(shell, policy="hysteresis",
+                      probes=[server.probe(), stats.probe()])
+    decision = manager.tick()       # sample -> decide -> post
+
+Each ``tick`` assembles one :class:`~repro.manager.telemetry.Signals`
+snapshot from the registered probes, hands it to the
+:class:`~repro.manager.policies.ElasticityPolicy`, posts the returned event
+batch through the shell, and appends a :class:`Decision` record (signals,
+applied plans, rejected events) to ``manager.decisions`` — the
+machine-readable autoscaling trajectory the scenario harness and
+``BENCH_manager.json`` serialize.
+
+Rejected events are part of the contract: policies decide on a snapshot, so
+a chained batch can race itself (a migrate into a region an earlier grow
+just filled).  The planner validates before any state swaps, the manager
+catches and records, and the loop retries from fresher signals next tick —
+actuation failure is telemetry, not a crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.manager.policies import ElasticityPolicy, get_elasticity_policy
+from repro.manager.telemetry import Probe, Signals, assemble_signals
+from repro.shell import events as ev
+from repro.shell.planner import Plan
+from repro.shell.shell import Shell
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One control-loop tick: what was seen, decided, applied, rejected."""
+
+    tick: int
+    signals: Signals
+    events: Tuple[ev.Event, ...]            # applied, in post order
+    plans: Tuple[Plan, ...]                 # the shell's plan per event
+    rejected: Tuple[Tuple[ev.Event, str], ...] = ()
+
+    @property
+    def acted(self) -> bool:
+        return bool(self.events)
+
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(type(e).__name__ for e in self.events)
+
+
+class Manager:
+    """Tick-driven resource manager: probes -> policy -> ``shell.post``.
+
+    Parameters
+    ----------
+    shell:
+        The control plane to actuate.
+    policy:
+        An :class:`ElasticityPolicy` instance or registered name
+        (``"hysteresis"`` / ``"traffic_defrag"`` / ``"fair_share"``).
+    probes:
+        Telemetry sources (``server.probe()``, ``stats.probe()``,
+        ``fabric.probe()`` or anything matching the ``Probe`` protocol).
+    interval:
+        Control period in ticks: ``step()`` samples *and* decides only on
+        every ``interval``-th call (skipped calls just advance the clock,
+        so each snapshot's deltas span one whole control window).  A
+        serving loop calls ``manager.step()`` per server tick while the
+        controller runs at this slower cadence; ``tick()`` always decides.
+    """
+
+    def __init__(self, shell: Shell,
+                 policy: Union[str, ElasticityPolicy] = "hysteresis",
+                 probes: Sequence[Probe] = (), *, interval: int = 1):
+        self.shell = shell
+        self.policy = get_elasticity_policy(policy)
+        self.probes: List[Probe] = list(probes)
+        self.interval = max(1, interval)
+        self.tick_count = 0
+        self.decisions: List[Decision] = []
+        self._last_signals: Optional[Signals] = None
+
+    def add_probe(self, probe: Probe) -> None:
+        self.probes.append(probe)
+
+    # ---- the loop -----------------------------------------------------
+    def signals(self) -> Signals:
+        """Assemble one snapshot — this *consumes* the current window.
+
+        Deltas and rates are measured since the previous ``signals()``
+        call, and probes may advance internal cursors; calling this
+        between control ticks therefore shortens the window the next
+        ``tick()`` decides on.  Observers who just want to look should
+        read :attr:`last_signals` (or ``Decision.signals``) instead.
+        """
+        sig = assemble_signals(self.shell, self.probes,
+                               tick=self.tick_count,
+                               prev=self._last_signals)
+        self._last_signals = sig
+        return sig
+
+    @property
+    def last_signals(self) -> Optional[Signals]:
+        """The most recent snapshot, side-effect-free (``None`` before the
+        first sample).  The observation surface for dashboards and tests —
+        reading it never perturbs the controller's delta windows."""
+        return self._last_signals
+
+    def tick(self) -> Decision:
+        """One full control iteration: sample, decide, post, record."""
+        sig = self.signals()
+        applied: List[ev.Event] = []
+        plans: List[Plan] = []
+        rejected: List[Tuple[ev.Event, str]] = []
+        for event in self.policy.decide(sig, self.shell.state):
+            try:
+                plans.append(self.shell.post(event))
+                applied.append(event)
+            except (KeyError, ValueError) as e:
+                # Stale-snapshot races within a batch (see module docs).
+                rejected.append((event, repr(e)))
+        decision = Decision(tick=self.tick_count, signals=sig,
+                            events=tuple(applied), plans=tuple(plans),
+                            rejected=tuple(rejected))
+        self.decisions.append(decision)
+        self.tick_count += 1
+        return decision
+
+    def step(self) -> Optional[Decision]:
+        """Interval-gated ``tick``: decide only every ``interval``-th call
+        (still advances the clock, so signals stay per-window aligned)."""
+        if self.tick_count % self.interval == 0:
+            return self.tick()
+        self.tick_count += 1
+        return None
+
+    # ---- views --------------------------------------------------------
+    def event_counts(self) -> dict:
+        """Histogram of applied event kinds over the manager's lifetime."""
+        out: dict = {}
+        for d in self.decisions:
+            for kind in d.kinds():
+                out[kind] = out.get(kind, 0) + 1
+        return out

@@ -1,0 +1,282 @@
+"""Deterministic scenario harness — workload + server + manager, one clock.
+
+The acceptance story for a resource manager is a *trajectory*, not a unit
+test: under a seeded workload, does the closed loop grow what is loaded,
+shrink what is idle, defragment from traffic, and never flap?  This module
+steps the three layers together on one tick clock:
+
+    workload (seeded rng) --> ElasticServer.submit / Submit / Release /
+                              FailRegion / HealRegion
+    server.step()         --> decode + fabric traffic under live registers
+    manager.step()        --> Signals -> policy -> Grow/Shrink/Migrate
+
+and records a machine-readable per-tick trace.  Everything is derived from
+``numpy.random.default_rng(seed)`` — same seed, same trace — which is what
+makes the property tests (no flapping, no starvation, bounded queues) and
+the ``BENCH_manager.json`` trajectory stable across runs.
+
+The scenario layer never posts scaling events: ``Submit``/``Release`` are
+tenant *arrivals and departures* (workload), ``FailRegion``/``HealRegion``
+are *environment faults*; every ``Grow``/``Shrink``/``Migrate`` in the
+resulting shell log was decided by the manager from telemetry alone.
+
+Scenario kinds:
+
+- ``bursty``        — stable roster, bursty request arrivals per tenant.
+- ``diurnal``       — sinusoidal arrival rate (day/night ramps).
+- ``churn``         — bursty arrivals plus tenants joining and leaving
+  mid-run (the acceptance scenario).
+- ``failure_storm`` — steady load while regions fail and heal randomly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.module import ModuleFootprint
+from repro.manager.manager import Decision, Manager
+from repro.manager.policies import (Hysteresis, PolicyChain,
+                                    TrafficAwareDefrag)
+from repro.shell import events as ev
+from repro.shell.server import ElasticServer, StreamRequest
+from repro.shell.shell import Shell
+
+GB = 1 << 30
+
+
+class SyntheticEngine:
+    """Deterministic token arithmetic (no model, no jit): prefill returns
+    ``prompt[-1] + 1``, decode increments.  Keeps scenario runs fast and
+    reproducible while the *fabric* data plane stays real."""
+
+    def prefill(self, prompt):
+        return int(prompt[-1]) + 1, None
+
+    def decode(self, tok, state):
+        return tok + 1, state
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's lifecycle inside a scenario."""
+
+    name: str
+    app_id: int
+    modules: int
+    module_gb: int = 4
+    arrive: int = 0
+    depart: Optional[int] = None
+
+    def footprints(self) -> Tuple[ModuleFootprint, ...]:
+        return tuple(ModuleFootprint(param_bytes=self.module_gb * GB,
+                                     flops_per_token=1e9,
+                                     activation_bytes_per_token=4096)
+                     for _ in range(self.modules))
+
+
+# (tick, rng) -> requests per live app this tick
+ArrivalFn = Callable[[int, np.random.Generator, Sequence[TenantSpec]],
+                     Dict[int, int]]
+
+
+@dataclasses.dataclass
+class ScenarioSpec:
+    kind: str
+    tenants: Tuple[TenantSpec, ...]
+    arrivals: ArrivalFn
+    fault_rate: float = 0.0         # per-tick P(fail a random healthy region)
+    heal_after: int = 6             # ticks until a storm-failed region heals
+
+
+def _bursty_arrivals(p: float = 0.25, lo: int = 2, hi: int = 6) -> ArrivalFn:
+    def fn(tick, rng, live):
+        out = {}
+        for spec in live:
+            if rng.random() < p:
+                out[spec.app_id] = int(rng.integers(lo, hi))
+        return out
+    return fn
+
+
+def _diurnal_arrivals(peak: float = 3.0, period: int = 24) -> ArrivalFn:
+    def fn(tick, rng, live):
+        rate = peak * (1 + math.sin(2 * math.pi * tick / period)) / 2
+        out = {}
+        for spec in live:
+            n = int(rng.poisson(rate))
+            if n:
+                out[spec.app_id] = n
+        return out
+    return fn
+
+
+def _roster(churn: bool, ticks: int) -> Tuple[TenantSpec, ...]:
+    base = (TenantSpec("alpha", app_id=0, modules=2),
+            TenantSpec("beta", app_id=1, modules=3))
+    if not churn:
+        return base
+    third = ticks // 3
+    return base + (
+        TenantSpec("gamma", app_id=2, modules=2, arrive=third,
+                   depart=2 * third),
+        TenantSpec("delta", app_id=3, modules=1, arrive=third + 4))
+
+
+def build_spec(kind: str, *, ticks: int) -> ScenarioSpec:
+    if kind == "bursty":
+        return ScenarioSpec(kind, _roster(False, ticks), _bursty_arrivals())
+    if kind == "diurnal":
+        return ScenarioSpec(kind, _roster(False, ticks), _diurnal_arrivals())
+    if kind == "churn":
+        return ScenarioSpec(kind, _roster(True, ticks), _bursty_arrivals())
+    if kind == "failure_storm":
+        return ScenarioSpec(kind, _roster(False, ticks),
+                            _bursty_arrivals(p=0.5, lo=1, hi=4),
+                            fault_rate=0.08)
+    raise ValueError(f"unknown scenario kind {kind!r}; "
+                     f"known: {sorted(SCENARIO_KINDS)}")
+
+
+SCENARIO_KINDS = ("bursty", "diurnal", "churn", "failure_storm")
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Machine-readable outcome of one seeded run."""
+
+    kind: str
+    seed: int
+    ticks: int
+    trace: List[dict]
+    decisions: List[Decision]
+    completions: int
+    event_counts: Dict[str, int]            # manager-applied events
+    rejected_events: int
+    max_queue: int
+    fabric_retraces: int
+    final_utilization: float
+    # live objects for post-run inspection (not serialized)
+    shell: Shell = dataclasses.field(repr=False, default=None)
+    server: ElasticServer = dataclasses.field(repr=False, default=None)
+
+    def summary(self) -> dict:
+        return {
+            "scenario": self.kind, "seed": self.seed, "ticks": self.ticks,
+            "completions": self.completions,
+            "max_queue": self.max_queue,
+            "rejected_events": self.rejected_events,
+            "fabric_retraces": self.fabric_retraces,
+            "final_utilization": round(self.final_utilization, 3),
+            **{f"n_{k.lower()}": v
+               for k, v in sorted(self.event_counts.items())},
+        }
+
+    def to_json(self) -> dict:
+        return {"schema": 1, **self.summary(), "trace": self.trace}
+
+
+def default_policy():
+    """The acceptance loop: hysteresis sizing + traffic-aware placement,
+    with shrink victims chosen by coldest-port traffic."""
+    defrag = TrafficAwareDefrag(max_moves=1)
+    return PolicyChain([
+        Hysteresis(victim_selector=TrafficAwareDefrag.coldest_regions),
+        defrag,
+    ])
+
+
+def run_scenario(kind: Union[str, ScenarioSpec], *, seed: int = 0,
+                 ticks: int = 60, n_regions: int = 6, n_slots: int = 4,
+                 hbm_gb: int = 16, policy=None, interval: int = 2,
+                 trace_path: Optional[Path] = None) -> ScenarioResult:
+    """Run one seeded closed-loop scenario; returns its trace + summary."""
+    from repro.core.elastic import Region
+
+    spec = build_spec(kind, ticks=ticks) if isinstance(kind, str) else kind
+    rng = np.random.default_rng(seed)
+    shell = Shell([Region(rid=i, n_chips=16, hbm_bytes=hbm_gb * GB)
+                   for i in range(n_regions)], policy="first_fit")
+    server = ElasticServer(shell, n_slots=n_slots)
+    manager = Manager(shell, policy or default_policy(),
+                      probes=[server.probe()], interval=interval)
+
+    live: Dict[str, TenantSpec] = {}
+    storm_heal: Dict[int, int] = {}         # rid -> heal tick
+    trace: List[dict] = []
+
+    for tick in range(ticks):
+        # -- workload: tenant lifecycle (arrivals/departures only) ------
+        for t in spec.tenants:
+            if t.arrive == tick:
+                shell.post(ev.Submit(tenant=t.name,
+                                     footprints=t.footprints(),
+                                     app_id=t.app_id))
+                server.register_engine(t.app_id, SyntheticEngine())
+                live[t.name] = t
+            if t.depart == tick and t.name in live:
+                shell.post(ev.Release(tenant=t.name))
+                del live[t.name]
+                # departed tenants take their queued work with them
+                server.queue = type(server.queue)(
+                    r for r in server.queue if r.app_id != t.app_id)
+
+        # -- environment: fault storm ----------------------------------
+        for rid, heal_at in list(storm_heal.items()):
+            if tick >= heal_at:
+                shell.post(ev.HealRegion(rid=rid))
+                del storm_heal[rid]
+        if spec.fault_rate and rng.random() < spec.fault_rate:
+            healthy = [r.rid for r in shell.state.regions
+                       if r.healthy and r.rid not in storm_heal]
+            if healthy:
+                rid = int(rng.choice(healthy))
+                shell.post(ev.FailRegion(rid=rid))
+                storm_heal[rid] = tick + spec.heal_after + int(
+                    rng.integers(0, 4))
+
+        # -- workload: request arrivals --------------------------------
+        for app_id, n in sorted(spec.arrivals(tick, rng,
+                                              list(live.values())).items()):
+            for _ in range(n):
+                server.submit(StreamRequest(
+                    app_id=app_id,
+                    prompt=np.array([int(rng.integers(0, 64))], np.int32),
+                    max_new=int(rng.integers(2, 6))))
+
+        # -- the two loops ---------------------------------------------
+        server.step()
+        decision = manager.step()
+
+        trace.append({
+            "tick": tick,
+            "queued": server.queued_count,
+            "active": server.active_count,
+            "free_regions": len(shell.state.free_regions()),
+            "utilization": round(shell.utilization(), 3),
+            "events": list(decision.kinds()) if decision else [],
+            "rejected": len(decision.rejected) if decision else 0,
+            "port_traffic": [int(v) for v in server.port_traffic],
+            "dropped": int(server.offered_packets
+                           - server.granted_packets),
+            "fabric_traces": int(server.fabric.trace_count),
+        })
+
+    result = ScenarioResult(
+        kind=spec.kind, seed=seed, ticks=ticks, trace=trace,
+        decisions=list(manager.decisions),
+        completions=len(server.completions),
+        event_counts=manager.event_counts(),
+        rejected_events=sum(len(d.rejected) for d in manager.decisions),
+        max_queue=max((row["queued"] for row in trace), default=0),
+        fabric_retraces=int(server.fabric.trace_count),
+        final_utilization=shell.utilization(),
+        shell=shell, server=server)
+    if trace_path is not None:
+        Path(trace_path).write_text(
+            json.dumps(result.to_json(), indent=1, sort_keys=True))
+    return result

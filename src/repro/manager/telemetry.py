@@ -1,0 +1,291 @@
+"""``repro.manager.telemetry`` — one typed, normalized ``Signals`` snapshot
+(also importable as ``repro.telemetry``).
+
+Before this module, demand signals were scattered attribute reads:
+``ElasticServer.port_traffic`` and its queue, ``StragglerStats`` EWMAs,
+``Fabric.trace_count``, ``DispatchPlan`` drop histograms.  The manager's
+control loop needs them as *one value*: a frozen :class:`Signals` snapshot
+assembled each tick from pluggable :class:`Probe` sources plus the shell's
+own pool state.
+
+A probe is anything with a ``name`` and a ``sample() -> Mapping`` returning
+**channels** — well-known keys the assembler understands:
+
+======================  ================================================
+channel                 value
+======================  ================================================
+``queue_depth``         ``{app_id: queued requests}``
+``queue_wait``          ``{app_id: mean ticks the queued requests waited}``
+``active``              ``{app_id: decode slots currently serving it}``
+``admission_wait``      ``{app_id: mean submit->admit ticks, this window}``
+``port_traffic``        cumulative per-port grant counts (int sequence)
+``offered_packets``     cumulative packets offered to the fabric (int)
+``granted_packets``     cumulative packets granted (int)
+``straggler_score``     ``{region: EWMA / fleet median}``
+``fabric_traces``       cumulative XLA retrace count (int)
+======================  ================================================
+
+Dict channels merge across probes (per-key update), scalar/array channels
+accumulate — several servers over one shell sum their traffic.  Rates and
+deltas are *normalized at assembly*: the assembler diffs cumulative
+counters against the previous snapshot so policies see per-window values
+(``port_traffic_delta``, ``drop_rate``) and never keep counter state
+themselves.
+
+The built-in probes wrap the existing subsystems (each also reachable as
+``subsystem.probe()``): :class:`ServerProbe` (``ElasticServer``),
+:class:`StragglerProbe` (``StragglerStats`` / ``TrainLoop``),
+:class:`FabricProbe` (``Fabric``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Dict, Mapping, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+from repro.shell.state import ON_SERVER, PoolState
+
+__all__ = [
+    "Signals", "TenantSignals", "Probe", "ServerProbe", "StragglerProbe",
+    "FabricProbe", "assemble_signals", "fragmentation",
+]
+
+
+@runtime_checkable
+class Probe(Protocol):
+    """Telemetry source seam (mirrors ``PlacementPolicy``'s shape)."""
+
+    name: str
+
+    def sample(self) -> Mapping[str, Any]:
+        """Current channel values (see module docstring for channel keys)."""
+        ...
+
+
+# ----------------------------------------------------------------------
+# the snapshot
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TenantSignals:
+    """Demand vs grant for one admitted tenant, one tick."""
+
+    name: str
+    app_id: int
+    requested: int              # modules the tenant wants placed
+    granted: int                # modules currently on regions
+    queue_depth: int = 0        # server requests waiting for this app
+    active: int = 0             # decode slots currently serving this app
+    queue_wait: float = 0.0     # mean ticks its queued requests have waited
+    admission_wait: float = 0.0  # mean submit->admit ticks, this window
+
+    @property
+    def starved(self) -> bool:
+        """Wants acceleration, has none."""
+        return self.requested > 0 and self.granted == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Signals:
+    """One tick's normalized telemetry — everything a policy may read."""
+
+    tick: int
+    epoch: int                              # shell register epoch
+    tenants: Tuple[TenantSignals, ...]
+    # pool availability
+    free_regions: int
+    healthy_regions: int
+    total_regions: int
+    fragmentation: float        # placed modules with a free lower rid / placed
+    # fabric traffic (cumulative and per-window)
+    port_traffic: Tuple[int, ...] = ()
+    port_traffic_delta: Tuple[int, ...] = ()
+    offered_packets: int = 0
+    granted_packets: int = 0
+    drop_rate: float = 0.0      # per-window 1 - granted/offered
+    fabric_traces: int = 0
+    # fault-tolerance
+    straggler_score: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
+
+    def tenant(self, name: str) -> Optional[TenantSignals]:
+        return next((t for t in self.tenants if t.name == name), None)
+
+    def by_app(self, app_id: int) -> Optional[TenantSignals]:
+        return next((t for t in self.tenants if t.app_id == app_id), None)
+
+    @property
+    def total_queue_depth(self) -> int:
+        return sum(t.queue_depth for t in self.tenants)
+
+    def region_traffic_delta(self, rid: int) -> int:
+        """This window's grants into a region's port (0 if unobserved)."""
+        port = rid + 1
+        if port < len(self.port_traffic_delta):
+            return int(self.port_traffic_delta[port])
+        return 0
+
+
+# ----------------------------------------------------------------------
+# built-in probes
+# ----------------------------------------------------------------------
+class ServerProbe:
+    """Queue/slot/traffic channels from one ``ElasticServer``.
+
+    ``admission_wait`` covers the completions that landed since the last
+    ``sample`` (a consumed-index window) — per-window like every other
+    normalized signal, and O(new completions) per call no matter how long
+    the server has been running.
+    """
+
+    name = "server"
+
+    def __init__(self, server):
+        self.server = server
+        self._completions_seen = 0
+
+    def sample(self) -> Mapping[str, Any]:
+        srv = self.server
+        depth: Dict[int, int] = {}
+        wait: Dict[int, float] = {}
+        for req in srv.queue:
+            depth[req.app_id] = depth.get(req.app_id, 0) + 1
+            wait[req.app_id] = (wait.get(req.app_id, 0.0)
+                                + (srv.tick - req.submitted_tick))
+        for app, total in wait.items():
+            wait[app] = total / depth[app]
+        active: Dict[int, int] = {}
+        for slot in srv.slots:
+            if slot is not None:
+                app = slot.request.app_id
+                active[app] = active.get(app, 0) + 1
+        admission: Dict[int, float] = {}
+        counts: Dict[int, int] = {}
+        fresh = srv.completions[self._completions_seen:]
+        self._completions_seen = len(srv.completions)
+        for c in fresh:
+            if c.submitted_tick < 0:
+                continue
+            admission[c.app_id] = (admission.get(c.app_id, 0.0)
+                                   + (c.admitted_tick - c.submitted_tick))
+            counts[c.app_id] = counts.get(c.app_id, 0) + 1
+        for app, total in admission.items():
+            admission[app] = total / counts[app]
+        return {
+            "queue_depth": depth,
+            "queue_wait": wait,
+            "active": active,
+            "admission_wait": admission,
+            "port_traffic": tuple(int(v) for v in srv.port_traffic),
+            "offered_packets": int(srv.offered_packets),
+            "granted_packets": int(srv.granted_packets),
+            "fabric_traces": int(srv.fabric.trace_count),
+        }
+
+
+class StragglerProbe:
+    """Straggler scores from ``StragglerStats`` (or via ``TrainLoop``)."""
+
+    name = "straggler"
+
+    def __init__(self, stats):
+        self.stats = stats
+
+    def sample(self) -> Mapping[str, Any]:
+        return {"straggler_score": self.stats.scores()}
+
+
+class FabricProbe:
+    """Epoch/retrace channel from a bare ``Fabric`` (servers already fold
+    their own fabric's count in; use this for directly-driven fabrics)."""
+
+    name = "fabric"
+
+    def __init__(self, fabric):
+        self.fabric = fabric
+
+    def sample(self) -> Mapping[str, Any]:
+        return {"fabric_traces": int(self.fabric.trace_count)}
+
+
+# ----------------------------------------------------------------------
+# assembly
+# ----------------------------------------------------------------------
+def _merge_channels(probes: Sequence[Probe]) -> Dict[str, Any]:
+    merged: Dict[str, Any] = {}
+    for probe in probes:
+        for key, value in probe.sample().items():
+            if key not in merged:
+                merged[key] = (dict(value) if isinstance(value, Mapping)
+                               else value)
+            elif isinstance(value, Mapping):
+                merged[key].update(value)
+            elif isinstance(value, (int, float)):
+                merged[key] += value
+            else:                           # sequences: element-wise sum
+                a, b = list(merged[key]), list(value)
+                if len(b) > len(a):
+                    a, b = b, a
+                merged[key] = tuple(x + y for x, y
+                                    in zip(a, b + [0] * (len(a) - len(b))))
+    return merged
+
+
+def fragmentation(state: PoolState) -> float:
+    """Fraction of placed modules that could compact downward: a free,
+    healthy region with a lower rid exists *that the module fits*.
+    0.0 == fully packed (no move is actually possible)."""
+    free = state.free_regions()
+    placed = [(p, t.footprints[i]) for t in state.tenants
+              for i, p in enumerate(t.placement) if p != ON_SERVER]
+    if not placed or not free:
+        return 0.0
+    movable = sum(1 for p, fp in placed
+                  if any(r.rid < p and fp.fits(r.hbm_bytes) for r in free))
+    return movable / len(placed)
+
+
+def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
+                     prev: Optional[Signals] = None) -> Signals:
+    """Fold probe channels + the shell's pool state into one snapshot.
+
+    ``prev`` (the last snapshot) turns cumulative counters into per-window
+    deltas and rates; pass ``None`` on the first tick.
+    """
+    state = shell.state
+    ch = _merge_channels(probes)
+    depth = ch.get("queue_depth", {})
+    wait = ch.get("queue_wait", {})
+    active = ch.get("active", {})
+    admission = ch.get("admission_wait", {})
+    tenants = tuple(
+        TenantSignals(
+            name=t.name, app_id=t.app_id,
+            requested=len(t.footprints), granted=t.placed_count,
+            queue_depth=int(depth.get(t.app_id, 0)),
+            active=int(active.get(t.app_id, 0)),
+            queue_wait=float(wait.get(t.app_id, 0.0)),
+            admission_wait=float(admission.get(t.app_id, 0.0)))
+        for t in sorted(state.tenants, key=lambda t: t.name))
+
+    traffic = tuple(int(v) for v in ch.get("port_traffic", ()))
+    prev_traffic = prev.port_traffic if prev is not None else ()
+    delta = tuple(v - (prev_traffic[i] if i < len(prev_traffic) else 0)
+                  for i, v in enumerate(traffic))
+    offered = int(ch.get("offered_packets", 0))
+    granted = int(ch.get("granted_packets", 0))
+    d_off = offered - (prev.offered_packets if prev is not None else 0)
+    d_grant = granted - (prev.granted_packets if prev is not None else 0)
+    drop_rate = 1.0 - d_grant / d_off if d_off > 0 else 0.0
+
+    healthy = [r for r in state.regions if r.healthy]
+    return Signals(
+        tick=tick, epoch=shell.epoch, tenants=tenants,
+        free_regions=len(state.free_regions()),
+        healthy_regions=len(healthy),
+        total_regions=len(state.regions),
+        fragmentation=fragmentation(state),
+        port_traffic=traffic, port_traffic_delta=delta,
+        offered_packets=offered, granted_packets=granted,
+        drop_rate=drop_rate,
+        fabric_traces=int(ch.get("fabric_traces", 0)),
+        straggler_score=dict(ch.get("straggler_score", {})))

@@ -88,15 +88,30 @@ class HeartbeatMonitor:
     arguments keep the seed's polled integration working.
     """
 
-    def __init__(self, region_ids: List[int], timeout_s: float = 30.0,
+    def __init__(self, region_ids: Optional[List[int]] = None,
+                 timeout_s: float = 30.0,
                  clock: Callable[[], float] = time.monotonic, *,
                  shell=None):
+        if region_ids is None:
+            if shell is None:
+                raise ValueError(
+                    "HeartbeatMonitor needs region_ids or a shell to "
+                    "derive them from")
+            region_ids = [r.rid for r in shell.state.regions]
         self.timeout_s = timeout_s
         self.shell = shell
         self._clock = clock
         now = clock()
         self.last_beat: Dict[int, float] = {r: now for r in region_ids}
         self.failed: Dict[int, float] = {}
+
+    def monitored_ids(self) -> List[int]:
+        """The regions this sweep watches.  With a shell attached this is
+        the *live* pool (a statically passed list would go stale as the
+        pool changes); standalone it is the constructor's list."""
+        if self.shell is not None:
+            return [r.rid for r in self.shell.state.regions]
+        return list(self.last_beat)
 
     def beat(self, region: int) -> None:
         self.last_beat[region] = self._clock()
@@ -107,7 +122,10 @@ class HeartbeatMonitor:
         """Mark regions with stale heartbeats failed; emit events/demote."""
         now = self._clock()
         newly_failed = []
-        for region, t in self.last_beat.items():
+        for region in self.monitored_ids():
+            # A region first seen by this sweep (joined the pool after
+            # construction) baselines now rather than failing instantly.
+            t = self.last_beat.setdefault(region, now)
             if region in self.failed:
                 continue
             if now - t > self.timeout_s:
@@ -139,9 +157,16 @@ class StragglerStats:
     no example-level polling.
     """
 
-    def __init__(self, region_ids: List[int], alpha: float = 0.3,
+    def __init__(self, region_ids: Optional[List[int]] = None,
+                 alpha: float = 0.3,
                  threshold: float = 1.5, patience: int = 3, *,
                  shell=None):
+        if region_ids is None:
+            if shell is None:
+                raise ValueError(
+                    "StragglerStats needs region_ids or a shell to derive "
+                    "them from")
+            region_ids = [r.rid for r in shell.state.regions]
         self.alpha = alpha
         self.threshold = threshold
         self.patience = patience
@@ -150,6 +175,20 @@ class StragglerStats:
         self.strikes: Dict[int, int] = {r: 0 for r in region_ids}
         self._reported: set = set()
         self._dirty: set = set()
+
+    def scores(self) -> Dict[int, float]:
+        """EWMA-to-fleet-median ratio per recorded region (1.0 == typical;
+        above ``threshold`` feeds a strike).  The manager's straggler
+        signal."""
+        med = self._median()
+        if not med:
+            return {}
+        return {r: v / med for r, v in self.ewma.items() if v is not None}
+
+    def probe(self):
+        """A ``repro.manager`` telemetry probe over these statistics."""
+        from repro.manager.telemetry import StragglerProbe
+        return StragglerProbe(self)
 
     def record(self, region: int, step_s: float) -> None:
         prev = self.ewma.get(region)

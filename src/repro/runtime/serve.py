@@ -65,10 +65,22 @@ def extra_decode_inputs(cfg: ModelConfig, batch_size: int,
 
 
 class ServeLoop:
-    """Greedy batched serving for one model (one module chain)."""
+    """Greedy batched serving for one model (one module chain).
+
+    Deprecated: the fixed-wave engine pads every request to the longest in
+    its batch and blocks admissions until the wave drains.
+    ``repro.shell.server.ElasticServer`` (admission queue + continuous
+    batching, shell-routed) is the maintained serving path.
+    """
 
     def __init__(self, cfg: ModelConfig, *, batch: int = 4,
                  max_len: int = 256, seed: int = 0):
+        import warnings
+        warnings.warn(
+            "DEPRECATED runtime.serve.ServeLoop — migrate to "
+            "repro.shell.server.ElasticServer (continuous batching, "
+            "shell-gated routing; see ROADMAP.md migration notes)",
+            DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.model = build_model(cfg)
         self.batch = batch

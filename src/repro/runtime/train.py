@@ -97,6 +97,14 @@ class TrainLoop:
             dataclasses.replace(self.pipeline.state(), step=self.start_step))
 
     # ------------------------------------------------------------------
+    def probe(self):
+        """A ``repro.manager`` telemetry probe over this loop's fleet
+        straggler statistics (requires ``straggler_stats=``)."""
+        if self.straggler_stats is None:
+            raise ValueError("TrainLoop.probe() needs straggler_stats=")
+        return self.straggler_stats.probe()
+
+    # ------------------------------------------------------------------
     def run_loop(self) -> List[Dict[str, Any]]:
         run = self.run
         self.pipeline.start()

@@ -17,8 +17,8 @@ Legacy entry points (``repro.core.elastic.ElasticResourceManager``,
 fixed-wave engines; new scaling work should target this package.
 """
 from repro.shell.events import (Event, FailRegion, Grow, HealRegion,
-                                HeartbeatLost, Release, Shrink, Submit,
-                                WatchdogTimeout)
+                                HeartbeatLost, Migrate, Release, Shrink,
+                                Submit, WatchdogTimeout)
 from repro.shell.planner import Action, Plan, plan, reconfig_cost_s, replay
 from repro.shell.policy import (BestFit, Defrag, FirstFit, PlacementPolicy,
                                 get_policy, register_policy)
@@ -30,7 +30,7 @@ from repro.shell.state import (ON_SERVER, PoolState, RegionState, TenantEntry,
 
 __all__ = [
     "Shell", "LogEntry",
-    "Event", "Submit", "Release", "Shrink", "Grow",
+    "Event", "Submit", "Release", "Shrink", "Grow", "Migrate",
     "FailRegion", "HealRegion", "HeartbeatLost", "WatchdogTimeout",
     "plan", "replay", "Plan", "Action", "reconfig_cost_s",
     "PlacementPolicy", "FirstFit", "BestFit", "Defrag",

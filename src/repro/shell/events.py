@@ -17,6 +17,12 @@ Two event families:
   planner treats them identically.  ``WatchdogTimeout`` with a region demotes
   that region's module (the "switch the grant to the next master" path);
   without a region it is informational and produces an empty plan.
+
+``Shrink`` optionally names *victim* regions so a controller (e.g. the
+``repro.manager`` traffic-aware policies) can decide **which** region a
+tenant gives up, not just how many; ``Migrate`` relocates one placed module
+to a named free region — the compaction verb the manager uses to defragment
+the pool from telemetry instead of a per-event policy pass.
 """
 from __future__ import annotations
 
@@ -45,9 +51,20 @@ class Release:
 
 @dataclasses.dataclass(frozen=True)
 class Shrink:
-    """Cap a tenant at ``n_regions`` regions (demote the tail modules)."""
+    """Cap a tenant at ``n_regions`` regions.
+
+    ``victims`` (region ids, in preference order, de-duplicated) select
+    which placed modules demote first; remaining excess comes off the
+    tail, which is the whole demotion set when ``victims`` is empty (the
+    pre-manager behaviour).  Victim regions not held by the tenant are
+    ignored."""
     tenant: str
     n_regions: int
+    victims: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "victims",
+                           tuple(dict.fromkeys(self.victims)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +72,20 @@ class Grow:
     """Raise (or with ``None`` remove) a tenant's region cap."""
     tenant: str
     n_regions: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Migrate:
+    """Relocate one placed module to a named free, healthy region.
+
+    The manager's defragmentation verb: unlike the per-event compaction
+    pass of the ``defrag`` placement policy, a ``Migrate`` is an explicit,
+    telemetry-driven decision (see ``repro.manager.TrafficAwareDefrag``).
+    Invalid moves (module on-server, target occupied/unhealthy/too small)
+    raise ``ValueError`` at planning time and leave the pool untouched."""
+    tenant: str
+    module_idx: int
+    dst: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,8 +117,8 @@ class WatchdogTimeout:
     deadline_s: float = 0.0
 
 
-Event = Union[Submit, Release, Shrink, Grow,
+Event = Union[Submit, Release, Shrink, Grow, Migrate,
               FailRegion, HealRegion, HeartbeatLost, WatchdogTimeout]
 
-TENANT_EVENTS = (Submit, Release, Shrink, Grow)
+TENANT_EVENTS = (Submit, Release, Shrink, Grow, Migrate)
 FT_EVENTS = (FailRegion, HealRegion, HeartbeatLost, WatchdogTimeout)

@@ -15,7 +15,8 @@ Action kinds:
                (distinct from ``demote``: it never held a region)
 - ``promote``  — on-server module moved onto a freed region
 - ``demote``   — placed module pushed back on-server (shrink)
-- ``migrate``  — placed module relocated by a compaction policy
+- ``migrate``  — placed module relocated (compaction policy or an explicit
+               ``Migrate`` event from a controller)
 - ``release``  — tenant departed
 - ``fail``     — region loss demoted its module
 
@@ -169,12 +170,52 @@ def _handle_shrink(state: PoolState, e: ev.Shrink,
         t, max_regions=e.n_regions))
     t = state.tenant(e.tenant)
     placed = [i for i, p in enumerate(t.placement) if p != ON_SERVER]
-    for i in placed[e.n_regions:]:
+    excess = len(placed) - e.n_regions
+    if e.victims:
+        # Victim regions demote first (controller-chosen, e.g. the coldest
+        # ports under live traffic); any remaining excess comes off the
+        # tail, exactly as in the victimless path.
+        by_rid = {t.placement[i]: i for i in placed}
+        chosen = [by_rid[rid] for rid in e.victims if rid in by_rid]
+        rest = [i for i in placed if i not in chosen]
+        demote = (chosen + rest[len(rest) - max(0, excess - len(chosen)):]
+                  if excess > len(chosen) else chosen[:max(0, excess)])
+    else:
+        demote = placed[e.n_regions:]
+    for i in demote:
         rid = state.tenant(e.tenant).placement[i]
         state = _unplace(state, e.tenant, i)
         actions.append(Action("demote", e.tenant, i, rid, 0.0))
     state = _promote_waiters(state, policy, actions)
     return state, set()
+
+
+def _handle_migrate(state: PoolState, e: ev.Migrate,
+                    policy: PlacementPolicy, actions: List[Action]
+                    ) -> Tuple[PoolState, Set[int]]:
+    t = state.tenant(e.tenant)
+    if not 0 <= e.module_idx < len(t.placement):
+        raise ValueError(f"{e.tenant!r} has no module {e.module_idx}")
+    src = t.placement[e.module_idx]
+    if src == ON_SERVER:
+        raise ValueError(
+            f"module ({e.tenant!r}, {e.module_idx}) is on-server; migrate "
+            f"moves placed modules (use Grow to promote waiters)")
+    if e.dst == src:
+        return state, set()                 # no-op move, empty plan
+    r = state.region(e.dst)                 # KeyError for unknown region
+    if not r.free:
+        raise ValueError(f"region {e.dst} is not free/healthy")
+    fp = t.footprints[e.module_idx]
+    if not fp.fits(r.hbm_bytes):
+        raise ValueError(
+            f"module ({e.tenant!r}, {e.module_idx}) does not fit region "
+            f"{e.dst}")
+    state = _unplace(state, e.tenant, e.module_idx)
+    state = _place(state, e.tenant, e.module_idx, e.dst)
+    actions.append(Action("migrate", e.tenant, e.module_idx, e.dst,
+                          reconfig_cost_s(fp)))
+    return state, {src, e.dst}
 
 
 def _handle_grow(state: PoolState, e: ev.Grow,
@@ -233,6 +274,8 @@ def plan(state: PoolState, event: ev.Event,
         state, rids = _handle_shrink(state, event, policy, actions)
     elif isinstance(event, ev.Grow):
         state, rids = _handle_grow(state, event, policy, actions)
+    elif isinstance(event, ev.Migrate):
+        state, rids = _handle_migrate(state, event, policy, actions)
     elif isinstance(event, (ev.FailRegion, ev.HeartbeatLost)):
         state, rids = _handle_fail(state, event.rid, policy, actions)
     elif isinstance(event, ev.HealRegion):

@@ -53,6 +53,7 @@ class StreamRequest:
     prompt: np.ndarray                  # [S] int32
     max_new: int = 16
     rid: int = -1                       # assigned by the server at submit
+    submitted_tick: int = -1            # stamped by the server at submit
 
 
 @dataclasses.dataclass
@@ -63,6 +64,7 @@ class StreamCompletion:
     entry_port: int                     # shell route at admission time
     admitted_tick: int
     finished_tick: int
+    submitted_tick: int = -1            # admission latency = admitted - this
 
 
 class ModelEngine:
@@ -209,6 +211,11 @@ class ElasticServer:
         self.n_slots = n_slots
         self.fabric = shell.fabric(backend=fabric_backend)
         self.port_traffic = np.zeros(shell.registers.n_ports, np.int64)
+        # Offered vs granted packets (drop rate = 1 - granted/offered).
+        # Cumulative like ``port_traffic``: reconfigurations re-route, they
+        # never reset the counters.
+        self.offered_packets = 0
+        self.granted_packets = 0
         self.queue: Deque[StreamRequest] = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.completions: List[StreamCompletion] = []
@@ -232,6 +239,7 @@ class ElasticServer:
         if request.app_id not in self._engines:
             raise KeyError(f"no engine registered for app {request.app_id}")
         request.rid = next(self._rid_counter)
+        request.submitted_tick = self.tick
         self.queue.append(request)
         return request.rid
 
@@ -246,6 +254,14 @@ class ElasticServer:
     @property
     def idle(self) -> bool:
         return self.active_count == 0 and not self.queue
+
+    # ---- telemetry ----------------------------------------------------
+    def probe(self):
+        """A ``repro.manager`` telemetry probe over this server: per-app
+        queue depth / wait / active slots, the per-port grant counters, and
+        the offered-vs-granted drop tally."""
+        from repro.manager.telemetry import ServerProbe
+        return ServerProbe(self)
 
     # ---- the server tick ----------------------------------------------
     def _admit(self) -> int:
@@ -302,7 +318,12 @@ class ElasticServer:
                 dst[i] = slot.entry_port
         src = np.full(self.n_slots, self.shell.state.host_port, np.int32)
         plan = self.fabric.plan(jnp.asarray(dst), jnp.asarray(src))
+        granted = int(np.asarray(plan.counts).sum())
         self.port_traffic += np.asarray(plan.counts, np.int64)
+        # Padding slots (dst = -1) are dropped by design; only real slots
+        # count as offered load, so offered - granted is the true drop tally.
+        self.offered_packets += int((dst >= 0).sum())
+        self.granted_packets += granted
 
     def step(self) -> List[StreamCompletion]:
         """One server tick: admit, then one decode token per active slot."""
@@ -325,7 +346,8 @@ class ElasticServer:
                     rid=slot.request.rid, app_id=slot.request.app_id,
                     tokens=list(slot.produced), entry_port=slot.entry_port,
                     admitted_tick=slot.admitted_tick,
-                    finished_tick=self.tick)
+                    finished_tick=self.tick,
+                    submitted_tick=slot.request.submitted_tick)
                 self.completions.append(comp)
                 finished.append(comp)
                 self.slots[i] = None            # rotate: free on completion

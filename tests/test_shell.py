@@ -217,6 +217,38 @@ class TestPolicies:
         assert "migrate" in kinds
         shell.verify()
 
+    def test_compaction_moves_pack_toward_low_rids(self):
+        """Satellite: direct unit coverage of Defrag.compaction_moves —
+        each move targets the lowest free rid below the module, and moves
+        within one pass see the regions earlier moves freed."""
+        shell = Shell(make_regions(4), policy="first_fit")
+        shell.submit("a", [fp(), fp()])          # rids 0, 1
+        shell.submit("b", [fp(), fp()])          # rids 2, 3
+        shell.release("a")                       # 0, 1 free; b fragmented
+        moves = Defrag().compaction_moves(shell.state)
+        # b's module 0 (rid 2) -> 0; then module 1 (rid 3) -> the freed 1
+        assert moves == (("b", 0, 2, 0), ("b", 1, 3, 1))
+
+    def test_compaction_moves_respect_fits(self):
+        """A module never migrates to a free region it cannot fit."""
+        sizes = [2, 16, 2, 16]
+        shell = Shell([Region(rid=i, n_chips=16, hbm_bytes=s * GB)
+                       for i, s in enumerate(sizes)], policy="first_fit")
+        shell.submit("pad", [fp(8)])             # rid 1 (first that fits)
+        shell.submit("big", [fp(8)])             # rid 3
+        shell.release("pad")                     # frees 1; 0 and 2 tiny
+        moves = Defrag().compaction_moves(shell.state)
+        assert moves == (("big", 0, 3, 1),)      # skips 0 and 2 (2 GB)
+
+    def test_compaction_moves_empty_when_packed_or_idle(self):
+        shell = Shell(make_regions(3), policy="first_fit")
+        assert Defrag().compaction_moves(shell.state) == ()
+        shell.submit("a", [fp(), fp()])          # already packed low
+        assert Defrag().compaction_moves(shell.state) == ()
+        # on-server modules are not compaction candidates
+        shell.post(Shrink(tenant="a", n_regions=1))
+        assert Defrag().compaction_moves(shell.state) == ()
+
     def test_policy_registry(self):
         assert isinstance(get_policy("first_fit"), FirstFit)
         assert isinstance(get_policy("best_fit"), BestFit)
@@ -324,6 +356,49 @@ class TestEventWiring:
         assert isinstance(shell.log[-1].event, HealRegion)
         assert shell.placement_of("a")[1] != ON_SERVER
         shell.verify()
+
+    def test_heartbeat_monitor_derives_live_region_ids_from_shell(self):
+        """Satellite: with shell= the monitored set is the live pool, not
+        a static list frozen at construction."""
+        from repro.runtime.ft import HeartbeatMonitor
+        shell = make_shell(n=3)
+        shell.submit("a", [fp(), fp(), fp()])
+        clock = [0.0]
+        mon = HeartbeatMonitor(timeout_s=5.0, clock=lambda: clock[0],
+                               shell=shell)
+        assert sorted(mon.monitored_ids()) == [0, 1, 2]
+        assert sorted(mon.last_beat) == [0, 1, 2]
+        # a region the static list never knew about (fresh monitor scoped
+        # to a subset) is still swept once a shell is attached
+        mon2 = HeartbeatMonitor([0], timeout_s=5.0,
+                                clock=lambda: clock[0], shell=shell)
+        clock[0] = 3.0
+        assert mon2.sweep() == []              # region 1/2 baseline at 3.0
+        assert sorted(mon2.last_beat) == [0, 1, 2]
+        clock[0] = 6.0
+        mon2.beat(0)
+        clock[0] = 9.0                         # 1/2 stale (6s > 5s), 0 fresh
+        assert sorted(mon2.sweep()) == [1, 2]
+        assert shell.placement_of("a")[1:] == [ON_SERVER, ON_SERVER]
+
+    def test_heartbeat_monitor_requires_ids_or_shell(self):
+        from repro.runtime.ft import HeartbeatMonitor, StragglerStats
+        with pytest.raises(ValueError):
+            HeartbeatMonitor(timeout_s=1.0)
+        with pytest.raises(ValueError):
+            StragglerStats()
+
+    def test_straggler_stats_derive_region_ids_and_scores(self):
+        from repro.runtime.ft import StragglerStats
+        shell = make_shell(n=3)
+        stats = StragglerStats(shell=shell, threshold=1.5, patience=1)
+        assert sorted(stats.ewma) == [0, 1, 2]
+        stats.record(0, 0.01)
+        stats.record(1, 0.01)
+        stats.record(2, 0.09)
+        scores = stats.scores()
+        assert scores[2] == pytest.approx(9.0)
+        assert scores[0] == pytest.approx(1.0)
 
     def test_step_watchdog_posts_timeout_event(self):
         import time
@@ -585,6 +660,43 @@ class TestElasticServer:
                 tb, sb = engine.decode(tb, sb)
                 ts, ss = engine.decode(ts, ss)
                 assert tb == ts
+
+    def test_port_traffic_is_cumulative_across_reconfig(self):
+        """Satellite: reconfiguration semantics are *re-route*, never
+        reset — the counters survive fail/heal, frozen while the port is
+        in reset and accumulating again once traffic resumes."""
+        shell, server = self.make(n_slots=1)
+        server.submit(_req(0, start=1, max_new=8))
+        server.step()
+        server.step()
+        assert server.port_traffic[1] == 2
+        assert server.offered_packets == server.granted_packets == 2
+        shell.fail_region(0)                     # port 1 reset; a's module
+        server.step()                            # relocates, slot keeps its
+        server.step()                            # admission-time port 1
+        assert server.port_traffic[1] == 2       # frozen, NOT zeroed
+        assert server.offered_packets == 4       # offered kept counting
+        assert server.granted_packets == 2       # ...but nothing granted
+        shell.heal_region(0)
+        server.step()
+        assert server.port_traffic[1] == 3       # resumes on the same port
+        assert server.fabric.trace_count == 1    # zero retraces throughout
+
+    def test_port_traffic_reroutes_new_admissions(self):
+        """In-flight slots keep their admission-time route (and drop while
+        its port is reset); requests admitted after the reconfiguration
+        route to the tenant's *new* entry port."""
+        shell, server = self.make(n_slots=1)
+        server.submit(_req(0, start=1, max_new=2))
+        server.run()
+        assert server.port_traffic[1] == 2       # app 0 entered at port 1
+        shell.fail_region(0)                     # module relocates: the
+        port = shell.route(0)                    # promote pass re-places it
+        assert port not in (None, 1)
+        server.submit(_req(0, start=5, max_new=2))
+        server.run()
+        assert server.port_traffic[1] == 2       # old port stays frozen
+        assert server.port_traffic[port] == 2    # new port took the stream
 
     def test_port_traffic_follows_reconfiguration(self):
         """The server's data plane is a shell-bound fabric: traffic counts
