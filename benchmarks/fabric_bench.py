@@ -5,8 +5,9 @@ Times ``plan`` and the fused ``transfer`` round-trip per backend over a
 the machine-readable ``BENCH_fabric.json`` trajectory (written by
 ``benchmarks/run.py``).  On this CPU container the pallas backend runs in
 interpret mode — correctness throughput, not TPU performance — and the
-sharded backend needs >1 local device, so it is reported only when a
-multi-device topology is available.
+sharded backend needs >1 local device, so its trajectory lives in the
+``moe`` bench (``BENCH_moe.json``), which subprocesses onto a forced
+4-device topology.
 """
 from __future__ import annotations
 
@@ -72,7 +73,7 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
                  "tracks relative backend cost, TPU perf is the roofline's "
                  "job"),
         "device_count": str(jax.device_count()),
-        "sharded": "skipped (needs >1 local device)"
+        "sharded": "see BENCH_moe.json (forced multi-device subprocess)"
         if jax.device_count() < 2 else "see rows",
     }
     return rows, claims

@@ -1,0 +1,140 @@
+"""MoE dispatch-implementation bench: dense vs gather vs fabric backends
+vs mesh-sharded expert parallelism, over a T x experts grid.
+
+Rows land in the machine-readable ``BENCH_moe.json`` trajectory (written
+by ``benchmarks/run.py``), so dispatch-path regressions show up PR over
+PR.  The single-device impls run in-process; the ``sharded`` rows run in
+a subprocess with a forced 4-device CPU topology (the repo convention —
+jax pins the device count at first init).  CPU wall time: the trajectory
+tracks *relative* dispatch cost, TPU performance is the roofline's job.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# Small grid — this doubles as the CI smoke bench.
+SHAPES = [(256, 4), (512, 8)]            # (T tokens, n_experts)
+D, D_FF = 32, 64
+TOP_K = 2
+CAPACITY_FACTOR = 2.0                    # ample: all impls agree exactly
+IMPLS = ["dense", "gather", "reference", "pallas"]
+N_SHARDS = 4
+
+_SHARDED_CODE = """
+import functools, json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.models.common import init_params
+from repro.models.config import MoEConfig
+from repro.models.moe import moe_defs, moe_forward_sharded, expert_capacity
+
+for T, E in {shapes}:
+    moe = MoEConfig(n_experts=E, top_k={top_k},
+                    capacity_factor={capacity_factor})
+    params = init_params(moe_defs({d}, {d_ff}, moe, "swiglu"),
+                         jax.random.key(0), jnp.float32)
+    B = {n_shards} * 2
+    x = jax.random.normal(jax.random.key(1), (B, T // B, {d}))
+    mesh = jax.make_mesh(({n_shards},), ("expert",))
+    cap = expert_capacity(T, moe)
+    fn = jax.jit(lambda p, xx: moe_forward_sharded(
+        p, xx, moe, "swiglu", mesh=mesh, capacity=cap))
+    y, stats = fn(params, x)
+    jax.block_until_ready(y)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(3):
+        y, stats = fn(params, x)
+    jax.block_until_ready(y)
+    us = 1e6 * (time.perf_counter() - t0) / 3
+    print(json.dumps({{
+        "impl": "sharded", "T": T, "E": E, "d": {d},
+        "forward_us": round(us, 1),
+        "tokens_per_s": round(T / (us * 1e-6)),
+        "dropped": int(stats["dropped"]),
+        "remote_packets": int(stats["remote_packets"]),
+        "local_packets": int(stats["local_packets"]),
+    }}))
+print("MOE_BENCH_SHARDED_DONE")
+"""
+
+
+def _time_us(fn, *args, n=3) -> float:
+    import jax
+    jax.block_until_ready(fn(*args)[0])  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r[0])
+    return 1e6 * (time.perf_counter() - t0) / n
+
+
+def _sharded_rows() -> Tuple[List[dict], str]:
+    """Run the sharded impl on a forced multi-device topology."""
+    code = _SHARDED_CODE.format(shapes=SHAPES, top_k=TOP_K,
+                                capacity_factor=CAPACITY_FACTOR, d=D,
+                                d_ff=D_FF, n_shards=N_SHARDS)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count"
+                        f"={N_SHARDS}")
+    src = Path(__file__).resolve().parent.parent / "src"
+    env["PYTHONPATH"] = str(src) + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        res = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=600)
+    except subprocess.TimeoutExpired:
+        return [], "sharded: subprocess timed out"
+    if res.returncode != 0 or "MOE_BENCH_SHARDED_DONE" not in res.stdout:
+        return [], f"sharded: subprocess failed: {res.stderr[-400:]}"
+    rows = [json.loads(line) for line in res.stdout.splitlines()
+            if line.startswith("{")]
+    return rows, f"forced {N_SHARDS}-device CPU topology (subprocess)"
+
+
+def bench_moe() -> Tuple[List[dict], Dict[str, str]]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.common import init_params
+    from repro.models.config import MoEConfig
+    from repro.models.moe import moe_apply, moe_defs
+
+    rows: List[dict] = []
+    for T, E in SHAPES:
+        moe = MoEConfig(n_experts=E, top_k=TOP_K,
+                        capacity_factor=CAPACITY_FACTOR)
+        params = init_params(moe_defs(D, D_FF, moe, "swiglu"),
+                             jax.random.key(0), jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (8, T // 8, D))
+        base = None
+        for impl in IMPLS:
+            fn = jax.jit(lambda p, xx, i=impl: moe_apply(
+                p, xx, moe, "swiglu", group_size=T, dispatch_impl=i))
+            us = _time_us(fn, params, x)
+            y, stats = fn(params, x)
+            y = np.asarray(y)
+            if base is None:
+                base = y
+            rows.append({
+                "impl": impl, "T": T, "E": E, "d": D,
+                "forward_us": round(us, 1),
+                "tokens_per_s": round(T / (us * 1e-6)),
+                "dropped": int(stats["dropped"]),
+                "agrees_dense": bool(np.allclose(y, base, atol=2e-4)),
+            })
+    sharded, sharded_note = _sharded_rows()
+    rows.extend(sharded)
+    claims = {
+        "note": ("CPU wall time (pallas in interpret mode); ample "
+                 "capacity so every impl routes identically"),
+        "device_count": str(jax.device_count()),
+        "sharded": sharded_note,
+    }
+    return rows, claims

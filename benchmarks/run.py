@@ -12,6 +12,7 @@ from pathlib import Path
 
 from benchmarks.fabric_bench import bench_fabric
 from benchmarks.manager_bench import bench_manager
+from benchmarks.moe_bench import bench_moe
 from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
                                      bench_fig5_elasticity,
                                      bench_fig6_scaling, bench_kernels_cpu,
@@ -29,13 +30,16 @@ BENCHES = {
     "fabric": ("repro.fabric — backend comparison", bench_fabric),
     "manager": ("repro.manager — closed-loop autoscaling scenarios",
                 bench_manager),
+    "moe": ("models.moe — dispatch impls incl. mesh expert parallelism",
+            bench_moe),
     "roofline": ("§Roofline — dry-run aggregation", bench_roofline),
 }
 
 # Stable, machine-readable perf trajectory: one schema-versioned file per
 # tracked bench, overwritten in place so successive PRs diff cleanly.
 TRAJECTORY_FILES = {"fabric": "BENCH_fabric.json",
-                    "manager": "BENCH_manager.json"}
+                    "manager": "BENCH_manager.json",
+                    "moe": "BENCH_moe.json"}
 
 
 def main(argv=None) -> int:

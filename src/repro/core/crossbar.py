@@ -33,8 +33,8 @@ from repro.core.registers import CrossbarRegisters, ErrorCode
 
 def _warn_deprecated(what: str, use: str) -> None:
     warnings.warn(f"DEPRECATED {what} — migrate to {use} "
-                  f"(see ROADMAP.md, repro.fabric)", DeprecationWarning,
-                  stacklevel=3)
+                  f"(see docs/migration.md, repro.fabric)",
+                  DeprecationWarning, stacklevel=3)
 
 
 def _axis_size(axis_name: str) -> int:

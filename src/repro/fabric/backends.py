@@ -24,7 +24,11 @@ same packets and registers (property-tested against the dense oracle in
   ``all_to_all`` of per-destination send slabs, combine an ``all_gather``
   of result slabs.  Methods must run inside ``shard_map`` over the axis;
   the per-source granted counts are ``all_gather``-ed so every shard
-  computes the same global WRR slots the dense oracle assigns.
+  computes the same global WRR slots the dense oracle assigns.  The
+  register file's port space may be *larger* than the axis: ``n_ports``
+  destinations partition contiguously into ``n_ports // axis_size`` slave
+  ports per shard (MoE expert parallelism: experts are slave ports, each
+  shard owns an expert block), while source ids stay the axis indices.
 
 Packets carry *values*, never shapes, from the register file — so an ERM
 register rewrite re-routes traffic through already-compiled dispatch code.
@@ -181,27 +185,42 @@ def _axis_size(axis_name: str) -> int:
 class ShardedBackend:
     """Crossbar over ICI collectives: every method must be called inside a
     ``shard_map`` over ``axis_name``; each shard is one source region (its
-    source id is the axis index — the ``src`` argument is ignored), holds
-    its local packets, and after ``dispatch`` owns the receive slab of the
-    destination with its index.  ``counts``/``drops`` are psummed so every
-    shard sees the oracle's global histogram."""
+    source id is the axis index — the ``src`` argument is ignored) and
+    holds its local packets.  The register file's ``n_ports`` destinations
+    partition contiguously across the axis (``ports_per_shard = n_ports //
+    axis_size`` slave ports per shard — 1 in the region-per-shard case, an
+    expert block in MoE expert parallelism); after ``dispatch`` each shard
+    owns the receive slabs of its own port block.  ``counts``/``drops``
+    are psummed so every shard sees the oracle's global histogram."""
 
     name = "sharded"
 
     def __init__(self, axis_name: str):
         self.axis_name = axis_name
 
+    def ports_per_shard(self, regs: CrossbarRegisters) -> int:
+        """Slave ports each shard owns; ``n_ports`` must divide evenly."""
+        n_src = _axis_size(self.axis_name)
+        n_dst = regs.n_ports
+        if n_dst % n_src:
+            raise ValueError(
+                f"sharded backend needs n_ports ({n_dst}) divisible by the "
+                f"'{self.axis_name}' axis size ({n_src}) so the port space "
+                f"partitions into equal per-shard blocks")
+        return n_dst // n_src
+
     def plan(self, dst: jax.Array, src: jax.Array,
              regs: CrossbarRegisters) -> DispatchPlan:
         ax = self.axis_name
-        n = _axis_size(ax)
+        n_dst = regs.n_ports
+        self.ports_per_shard(regs)                           # divisibility
         me = jax.lax.axis_index(ax)
         dst = dst.astype(jnp.int32)
-        in_range = (dst >= 0) & (dst < n)
-        dstc = jnp.clip(dst, 0, n - 1)
+        in_range = (dst >= 0) & (dst < n_dst)
+        dstc = jnp.clip(dst, 0, n_dst - 1)
         iso_ok = (in_range & regs.allowed[me, dstc]
                   & ~regs.reset[me] & ~regs.reset[dstc])
-        dst_oh = (jax.nn.one_hot(dstc, n, dtype=jnp.int32)
+        dst_oh = (jax.nn.one_hot(dstc, n_dst, dtype=jnp.int32)
                   * iso_ok[:, None].astype(jnp.int32))
         rank = jnp.cumsum(dst_oh, axis=0) - dst_oh
         rank = jnp.take_along_axis(rank, dstc[:, None], axis=1)[:, 0]
@@ -220,7 +239,8 @@ class ShardedBackend:
                       jnp.where(cap_ok, jnp.int32(ErrorCode.OK),
                                 jnp.int32(ErrorCode.ACK_TIMEOUT))))
         counts = jax.lax.psum(
-            jnp.zeros((n,), jnp.int32).at[dstc].add(keep.astype(jnp.int32)),
+            jnp.zeros((n_dst,), jnp.int32).at[dstc].add(
+                keep.astype(jnp.int32)),
             ax)
         drops = jax.lax.psum(
             jnp.zeros((4,), jnp.int32).at[error].add(1), ax)
@@ -229,31 +249,35 @@ class ShardedBackend:
 
     def dispatch(self, x: jax.Array, plan: DispatchPlan,
                  regs: CrossbarRegisters, capacity: int) -> jax.Array:
-        """Local packets [T_loc, D] -> this shard's receive slab [C, D].
+        """Local packets [T_loc, D] -> this shard's receive slabs [P, C, D]
+        (``P = ports_per_shard`` — the shard's contiguous slave-port block).
 
         Slots are globally unique per destination, so the per-source
         contributions coming out of the ``all_to_all`` just sum."""
-        n = _axis_size(self.axis_name)
-        dst_oh = jax.nn.one_hot(plan.dst, n, dtype=x.dtype)  # -1 -> zero row
+        n_src = _axis_size(self.axis_name)
+        n_dst = regs.n_ports
+        pps = self.ports_per_shard(regs)
+        dst_oh = jax.nn.one_hot(plan.dst, n_dst, dtype=x.dtype)  # -1 -> 0 row
         slot_oh = jax.nn.one_hot(plan.slot, capacity, dtype=x.dtype)
         sel = (dst_oh[:, :, None] * slot_oh[:, None, :]
                * plan.keep[:, None, None].astype(x.dtype))
-        send = jnp.einsum("tsc,td->scd", sel, x)             # [n, C, D]
+        send = jnp.einsum("tsc,td->scd", sel, x)             # [n_dst, C, D]
+        send = send.reshape(n_src, pps, capacity, x.shape[-1])
         recv = jax.lax.all_to_all(send, self.axis_name, split_axis=0,
                                   concat_axis=0, tiled=False)
-        return jnp.sum(recv, axis=0)                         # [C, D]
+        return jnp.sum(recv, axis=0)                         # [P, C, D]
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
                 weights: jax.Array) -> jax.Array:
-        """Local result slab [C, D] -> local packets [T_loc, D], weighted.
+        """Local result slabs [P, C, D] -> local packets [T_loc, D], weighted.
 
         Result slabs are all-gathered (every source reads the rows its
         packets landed in); dropped packets get zeros."""
-        n = _axis_size(self.axis_name)
-        C = y.shape[0]
-        slabs = jax.lax.all_gather(y, self.axis_name)        # [S, C, D]
-        flat = slabs.reshape(n * C, -1)
-        addr = jnp.clip(plan.dst, 0, n - 1) * C + plan.slot
+        n_src = _axis_size(self.axis_name)
+        pps, C = y.shape[0], y.shape[1]
+        slabs = jax.lax.all_gather(y, self.axis_name)        # [S, P, C, D]
+        flat = slabs.reshape(n_src * pps * C, -1)            # port-major
+        addr = jnp.clip(plan.dst, 0, n_src * pps - 1) * C + plan.slot
         out = jnp.take(flat, addr, axis=0)
         return out * (plan.keep.astype(y.dtype) * weights)[:, None]
 
@@ -271,7 +295,20 @@ _BACKENDS: Dict[str, Callable[..., object]] = {
 def register_fabric_backend(name: str, factory: Callable[..., object],
                             ) -> None:
     """Register a custom backend factory under ``name`` (duck-typed:
-    ``plan``/``dispatch``/``combine`` with the signatures above)."""
+    ``plan``/``dispatch``/``combine`` with the signatures above).
+
+    Once registered, the name works everywhere a backend is selected —
+    ``Fabric(regs, backend=name)``, ``shell.fabric(backend=name)``, and
+    ``moe_apply(dispatch_impl=name)``:
+
+    >>> from repro.fabric import (Fabric, ReferenceBackend, get_backend,
+    ...                           register_fabric_backend)
+    >>> class LoggingBackend(ReferenceBackend):
+    ...     name = "logging"
+    >>> register_fabric_backend("logging", LoggingBackend)
+    >>> get_backend("logging").name
+    'logging'
+    """
     _BACKENDS[name] = factory
 
 

@@ -17,7 +17,10 @@ call time.  A fabric bound to a ``Shell`` (``shell.fabric()``) re-reads
 the very next ``transfer`` without a single recompile — the paper's cheap
 reconfiguration surface, enforced at the API boundary.  ``trace_count``
 exposes how often XLA retraced, which the regression tests pin across
-reconfigurations.
+reconfigurations.  Callers that are *already inside a trace* (a model's
+shard_map body under an outer jit — the sharded-MoE path) pass the register
+file they received as an argument via ``registers=`` so the same guarantee
+holds one level up.
 
 Backends (``reference`` / ``pallas`` / ``sharded``) are plan-equivalent and
 selected at construction; see ``repro.fabric.backends``.
@@ -74,6 +77,14 @@ class Fabric:
         if capacity is None:
             capacity = int(np.max(np.asarray(self.registers.capacity)))
         self.capacity = int(capacity)
+        # Host-side cumulative traffic counters, fed by ``account(plan)``
+        # (the ``ElasticServer`` tick and sharded-MoE training loops call
+        # it); ``FabricProbe`` samples them into manager telemetry.
+        self.port_traffic = np.zeros(self.registers.n_ports, np.int64)
+        self.offered_packets = 0
+        self.granted_packets = 0
+        self.remote_packets = 0         # granted into another shard's ports
+        self.local_packets = 0          # granted into the source's own ports
         self._trace_counts = {"plan": 0, "dispatch": 0, "combine": 0,
                               "transfer": 0}
         self._jit_plan = jax.jit(self._plan_impl)
@@ -108,9 +119,55 @@ class Fabric:
 
     def probe(self):
         """A ``repro.manager`` telemetry probe over this fabric (epoch +
-        retrace counters — the manager's zero-recompile regression signal)."""
+        retrace counters — the manager's zero-recompile regression signal —
+        plus whatever traffic ``account`` has accumulated)."""
         from repro.manager.telemetry import FabricProbe
         return FabricProbe(self)
+
+    def account(self, plan, *, src_shard: Optional[int] = None,
+                n_shards: Optional[int] = None) -> None:
+        """Fold one concrete ``DispatchPlan`` into the cumulative traffic
+        counters (host-side; call it with plans that have left the device).
+
+        ``port_traffic`` accumulates per-destination grants, ``offered_``/
+        ``granted_packets`` the drop tally (``dst = -1`` padding rows are
+        never offered load).  When ``src_shard``/``n_shards`` are given the
+        grants also split into ``local_packets`` (granted into the source
+        shard's own contiguous port block) vs ``remote_packets`` (granted
+        across the mesh axis — the §IV-E crossbar hops that actually cost
+        ICI bandwidth); the manager's ``Signals`` surfaces both.
+        """
+        self._add_counts(plan.counts)
+        dst = np.asarray(plan.dst)
+        keep = np.asarray(plan.keep)
+        self.offered_packets += int((dst >= 0).sum())
+        granted = int(keep.sum())
+        self.granted_packets += granted
+        if src_shard is not None and n_shards:
+            pps = max(1, self.port_traffic.shape[0] // n_shards)
+            local = int((keep & (dst // pps == src_shard)).sum())
+            self.local_packets += local
+            self.remote_packets += granted - local
+
+    def account_stats(self, stats) -> None:
+        """Fold a sharded-MoE ``stats`` mapping (the second return of
+        ``moe_apply(dispatch_impl="sharded")``, whose remote/local split is
+        psummed in-graph where the shard index is known) into the same
+        cumulative counters ``account`` maintains."""
+        if "counts" in stats:
+            self._add_counts(stats["counts"])
+        self.offered_packets += int(stats.get("offered_packets", 0))
+        self.granted_packets += int(stats.get("granted_packets", 0))
+        self.remote_packets += int(stats.get("remote_packets", 0))
+        self.local_packets += int(stats.get("local_packets", 0))
+
+    def _add_counts(self, counts) -> None:
+        counts = np.asarray(counts, np.int64)
+        if counts.shape[0] > self.port_traffic.shape[0]:
+            grown = np.zeros(counts.shape[0], np.int64)
+            grown[:self.port_traffic.shape[0]] = self.port_traffic
+            self.port_traffic = grown
+        self.port_traffic[:counts.shape[0]] += counts
 
     def _gated(self, regs: CrossbarRegisters) -> CrossbarRegisters:
         """Register capacities clamped to the static slab depth, so every
@@ -142,35 +199,81 @@ class Fabric:
         return self.backend.combine(y, plan, weights), plan
 
     # ---- public API ---------------------------------------------------
-    def plan(self, dst: jax.Array, src: jax.Array) -> DispatchPlan:
-        """Grant decisions for packets ``src[t] -> dst[t]`` under the
-        current register values (``dst = -1`` marks padding)."""
-        return self._jit_plan(self.registers, dst, src)
+    # Every method takes an optional ``registers=`` override: the bound
+    # file is the default, but code already *inside* a trace (a model's
+    # shard_map body, an outer jit) must pass the register file it received
+    # as a traced argument — that is what keeps reconfiguration
+    # recompile-free end to end.
 
-    def dispatch(self, x: jax.Array, dst: jax.Array, src: jax.Array
+    def plan(self, dst: jax.Array, src: jax.Array, *,
+             registers: Optional[CrossbarRegisters] = None) -> DispatchPlan:
+        """Grant decisions for packets ``src[t] -> dst[t]`` under the
+        current register values (``dst = -1`` marks padding).
+
+        The plan is the paper's arbitration read-back: ``keep`` (granted),
+        ``slot`` (global WRR receive slot), ``error`` (Table III codes for
+        drops), ``counts`` (per-destination grant histogram), ``drops``
+        (error-code histogram).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.registers import CrossbarRegisters
+        >>> from repro.fabric import Fabric
+        >>> regs = CrossbarRegisters.create(4, capacity=8)
+        >>> regs = regs.with_quota(dst=2, src=0, packages=1)  # WRR quota
+        >>> fabric = Fabric(regs, backend="reference", capacity=8)
+        >>> plan = fabric.plan(jnp.asarray([2, 2, 1]), jnp.asarray([0, 0, 0]))
+        >>> int(plan.keep.sum())        # second packet to port 2 over quota
+        2
+        """
+        regs = self.registers if registers is None else registers
+        return self._jit_plan(regs, dst, src)
+
+    def dispatch(self, x: jax.Array, dst: jax.Array, src: jax.Array, *,
+                 registers: Optional[CrossbarRegisters] = None
                  ) -> Tuple[jax.Array, DispatchPlan]:
-        """Plan + scatter packets [T, D] into destination slabs."""
-        return self._jit_dispatch(self.registers, x, dst, src)
+        """Plan + scatter packets ``x`` [T, D] into destination receive
+        slabs: [n_ports, C, D] for the single-device backends, this shard's
+        [ports_per_shard, C, D] block for the sharded backend.  Dropped
+        packets land nowhere; their error codes are in the returned plan."""
+        regs = self.registers if registers is None else registers
+        return self._jit_dispatch(regs, x, dst, src)
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
-                weights: Optional[jax.Array] = None) -> jax.Array:
-        """Gather result slabs back to packet order; dropped packets get
+                weights: Optional[jax.Array] = None, *,
+                registers: Optional[CrossbarRegisters] = None) -> jax.Array:
+        """Gather result slabs back to packet order ([T, D]), scaled by
+        ``weights`` (e.g. MoE router probabilities); dropped packets get
         zeros (their error codes live in ``plan.error``)."""
         if weights is None:
             weights = jnp.ones(plan.keep.shape, y.dtype)
-        return self._jit_combine(self.registers, y, plan, weights)
+        regs = self.registers if registers is None else registers
+        return self._jit_combine(regs, y, plan, weights)
 
     def transfer(self, x: jax.Array, dst: jax.Array, src: jax.Array,
                  apply_fn: Optional[ApplyFn] = None,
-                 weights: Optional[jax.Array] = None
+                 weights: Optional[jax.Array] = None, *,
+                 registers: Optional[CrossbarRegisters] = None
                  ) -> Tuple[jax.Array, DispatchPlan]:
         """Fused round-trip: plan -> dispatch -> ``apply_fn`` on the slabs
         -> combine.  One compiled program per (shape, ``apply_fn``)
         combination — pass a stable function, not a fresh lambda per call,
-        or you pay a retrace each time."""
+        or you pay a retrace each time.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.registers import CrossbarRegisters
+        >>> from repro.fabric import Fabric
+        >>> regs = CrossbarRegisters.create(2, capacity=4)
+        >>> fabric = Fabric(regs, backend="reference", capacity=4)
+        >>> x = jnp.ones((3, 2))
+        >>> dst = jnp.asarray([0, 1, 1]); src = jnp.asarray([0, 0, 0])
+        >>> y, plan = fabric.transfer(x, dst, src, apply_fn=lambda s: s * 2)
+        >>> y.shape, int(plan.keep.sum()), fabric.trace_counts["transfer"]
+        ((3, 2), 3, 1)
+        """
         if weights is None:
             weights = jnp.ones(dst.shape, x.dtype)
-        return self._jit_transfer(self.registers, x, dst, src, weights,
+        regs = self.registers if registers is None else registers
+        return self._jit_transfer(regs, x, dst, src, weights,
                                   apply_fn=apply_fn)
 
 

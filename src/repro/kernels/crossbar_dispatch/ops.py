@@ -30,7 +30,8 @@ def _warn_deprecated(what: str) -> None:
     warnings.warn(
         f"DEPRECATED {what} — migrate to repro.fabric.Fabric(regs, "
         f'backend="pallas") (multi-source WRR composition, epoch tracking, '
-        f"oracle-equivalent plans)", DeprecationWarning, stacklevel=3)
+        f"oracle-equivalent plans; see docs/migration.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 def _should_interpret() -> bool:

@@ -111,7 +111,28 @@ class Manager:
         return self._last_signals
 
     def tick(self) -> Decision:
-        """One full control iteration: sample, decide, post, record."""
+        """One full control iteration: sample, decide, post, record.
+
+        >>> from repro.core.elastic import Region
+        >>> from repro.core.module import ModuleFootprint
+        >>> from repro.manager import Manager
+        >>> from repro.shell import Shell
+        >>> GB = 1 << 30
+        >>> shell = Shell([Region(rid=i, n_chips=8, hbm_bytes=8 * GB)
+        ...                for i in range(4)])
+        >>> _ = shell.submit("a", [ModuleFootprint(GB, 1e9, 4096)] * 3,
+        ...                  app_id=0)
+        >>> _ = shell.submit("b", [ModuleFootprint(GB, 1e9, 4096)] * 3,
+        ...                  app_id=1)
+        >>> shell.placement_of("b")            # 'a' got 3 regions first
+        [3, -1, -1]
+        >>> manager = Manager(shell, policy="fair_share")
+        >>> decision = manager.tick()          # rebalance toward 2 + 2
+        >>> decision.kinds()
+        ('Shrink', 'Grow')
+        >>> shell.placement_of("b")            # -1 == runs on-server
+        [3, 2, -1]
+        """
         sig = self.signals()
         applied: List[ev.Event] = []
         plans: List[Plan] = []

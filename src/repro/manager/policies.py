@@ -49,7 +49,24 @@ class ElasticityPolicy(Protocol):
                state: PoolState) -> Sequence[ev.Event]:
         """Events to post this tick (may be empty).  Decisions compose on
         the snapshot they were made from; the manager tolerates rejected
-        posts, so policies should prefer conservative batches."""
+        posts, so policies should prefer conservative batches.
+
+        A custom policy is any object with ``name`` and this method —
+        register it and ``Manager(shell, policy="sla")`` resolves it by
+        string:
+
+        >>> from repro.manager import register_elasticity_policy
+        >>> from repro.shell import events as ev
+        >>> @register_elasticity_policy
+        ... class GrowWhenStarved:
+        ...     name = "sla"
+        ...     def decide(self, signals, state):
+        ...         return [ev.Grow(tenant=t.name)
+        ...                 for t in signals.tenants if t.starved]
+        >>> from repro.manager import get_elasticity_policy
+        >>> get_elasticity_policy("sla").name
+        'sla'
+        """
         ...
 
 
@@ -166,13 +183,21 @@ class TrafficAwareDefrag:
     grants — pluggable into ``Hysteresis(victim_selector=...)`` and
     ``FairShare(victim_selector=...)`` so *shrinks* also give up the least
     loaded region instead of the tail module's.
+
+    ``min_remote_fraction`` gates compaction on the sharded fabric's
+    per-axis split (``Signals.remote_fraction``): when a window's granted
+    traffic stays on its source shards, moving modules buys no interconnect
+    locality, so a non-zero gate keeps the defragger quiet until remote
+    bytes actually flow.  0.0 (default) disables the gate.
     """
 
     name = "traffic_defrag"
 
-    def __init__(self, *, max_moves: int = 1, threshold: float = 0.0):
+    def __init__(self, *, max_moves: int = 1, threshold: float = 0.0,
+                 min_remote_fraction: float = 0.0):
         self.max_moves = max_moves
         self.threshold = threshold
+        self.min_remote_fraction = min_remote_fraction
 
     @staticmethod
     def coldest_regions(signals: Signals, state: PoolState, tenant: str,
@@ -187,6 +212,9 @@ class TrafficAwareDefrag:
     def decide(self, signals: Signals,
                state: PoolState) -> Sequence[ev.Event]:
         if signals.fragmentation <= self.threshold:
+            return []
+        if (self.min_remote_fraction > 0.0
+                and signals.remote_fraction < self.min_remote_fraction):
             return []
         free = sorted(r.rid for r in state.free_regions())
         hbm = {r.rid: r.hbm_bytes for r in state.regions}
@@ -339,6 +367,20 @@ def get_elasticity_policy(policy) -> ElasticityPolicy:
 
 
 def register_elasticity_policy(cls) -> type:
-    """Register a custom policy under its ``name`` (decorator-friendly)."""
+    """Register a custom elasticity policy under its ``name``
+    (decorator-friendly); ``Manager(shell, policy=name)`` and
+    ``PolicyChain([name, ...])`` then resolve it by string — see the
+    worked example on :meth:`ElasticityPolicy.decide`.
+
+    >>> from repro.manager import (get_elasticity_policy,
+    ...                            register_elasticity_policy)
+    >>> @register_elasticity_policy
+    ... class Freeze:
+    ...     name = "freeze"
+    ...     def decide(self, signals, state):
+    ...         return []          # hold every allocation where it is
+    >>> get_elasticity_policy("freeze").decide(None, None)
+    []
+    """
     _REGISTRY[cls.name] = cls
     return cls

@@ -21,6 +21,8 @@ channel                 value
 ``port_traffic``        cumulative per-port grant counts (int sequence)
 ``offered_packets``     cumulative packets offered to the fabric (int)
 ``granted_packets``     cumulative packets granted (int)
+``remote_packets``      cumulative grants that crossed the mesh axis (int)
+``local_packets``       cumulative grants on the source's own shard (int)
 ``straggler_score``     ``{region: EWMA / fleet median}``
 ``fabric_traces``       cumulative XLA retrace count (int)
 ======================  ================================================
@@ -103,6 +105,12 @@ class Signals:
     granted_packets: int = 0
     drop_rate: float = 0.0      # per-window 1 - granted/offered
     fabric_traces: int = 0
+    # per-axis (sharded fabric) traffic: grants that crossed the mesh axis
+    # vs. stayed on the source shard's own port block
+    remote_traffic: int = 0
+    local_traffic: int = 0
+    remote_traffic_delta: int = 0
+    local_traffic_delta: int = 0
     # fault-tolerance
     straggler_score: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
@@ -123,6 +131,15 @@ class Signals:
         if port < len(self.port_traffic_delta):
             return int(self.port_traffic_delta[port])
         return 0
+
+    @property
+    def remote_fraction(self) -> float:
+        """This window's cross-axis share of granted traffic (0.0 when no
+        sharded fabric reported) — the signal ``TrafficAwareDefrag`` gates
+        compaction on: moving modules only pays when traffic actually
+        crosses the interconnect."""
+        total = self.remote_traffic_delta + self.local_traffic_delta
+        return self.remote_traffic_delta / total if total > 0 else 0.0
 
 
 # ----------------------------------------------------------------------
@@ -195,8 +212,13 @@ class StragglerProbe:
 
 
 class FabricProbe:
-    """Epoch/retrace channel from a bare ``Fabric`` (servers already fold
-    their own fabric's count in; use this for directly-driven fabrics)."""
+    """Retrace + accounted-traffic channels from a bare ``Fabric``.
+
+    Servers already fold their own fabric's counters in (``ServerProbe``);
+    attach this to *directly-driven* fabrics — e.g. the sharded-MoE fabric
+    a training loop feeds via ``fabric.account_stats(stats)`` — never to a
+    fabric a ``ServerProbe`` is already reporting (the channels would
+    double-count)."""
 
     name = "fabric"
 
@@ -204,7 +226,16 @@ class FabricProbe:
         self.fabric = fabric
 
     def sample(self) -> Mapping[str, Any]:
-        return {"fabric_traces": int(self.fabric.trace_count)}
+        f = self.fabric
+        ch: Dict[str, Any] = {"fabric_traces": int(f.trace_count)}
+        if f.offered_packets or f.granted_packets:
+            ch["port_traffic"] = tuple(int(v) for v in f.port_traffic)
+            ch["offered_packets"] = int(f.offered_packets)
+            ch["granted_packets"] = int(f.granted_packets)
+        if f.remote_packets or f.local_packets:
+            ch["remote_packets"] = int(f.remote_packets)
+            ch["local_packets"] = int(f.local_packets)
+        return ch
 
 
 # ----------------------------------------------------------------------
@@ -276,6 +307,10 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
     d_off = offered - (prev.offered_packets if prev is not None else 0)
     d_grant = granted - (prev.granted_packets if prev is not None else 0)
     drop_rate = 1.0 - d_grant / d_off if d_off > 0 else 0.0
+    remote = int(ch.get("remote_packets", 0))
+    local = int(ch.get("local_packets", 0))
+    d_remote = remote - (prev.remote_traffic if prev is not None else 0)
+    d_local = local - (prev.local_traffic if prev is not None else 0)
 
     healthy = [r for r in state.regions if r.healthy]
     return Signals(
@@ -288,4 +323,6 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
         offered_packets=offered, granted_packets=granted,
         drop_rate=drop_rate,
         fabric_traces=int(ch.get("fabric_traces", 0)),
+        remote_traffic=remote, local_traffic=local,
+        remote_traffic_delta=d_remote, local_traffic_delta=d_local,
         straggler_score=dict(ch.get("straggler_score", {})))

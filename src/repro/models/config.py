@@ -15,9 +15,11 @@ class MoEConfig:
     capacity_factor: float = 1.25
     # "dense" = Mesh-TF one-hot-matmul dispatch (faithful baseline);
     # "gather" = indexed scatter/gather (§Perf iteration "moe-gather");
-    # any other value names a repro.fabric backend ("reference",
-    # "pallas", ...) — the layer then routes groups through
-    # Fabric.transfer, sharing the shell's interconnect implementation.
+    # "sharded" = mesh expert parallelism (must run inside a shard_map —
+    # see models.moe.moe_forward_sharded); any other value names a
+    # repro.fabric backend ("reference", "pallas", ...) — the layer then
+    # routes groups through Fabric.transfer, sharing the shell's
+    # interconnect implementation.
     dispatch: str = "dense"
 
 

@@ -16,6 +16,14 @@ Grouped dense formulation (Switch/Mesh-TF style): groups keep the dispatch
 tensor O(G * Tg^2) instead of O(T^2); each group independently enforces the
 pairwise quota — which is precisely ``pairwise_dispatch_plan`` vmapped over
 groups. Group size is a tunable (perf hillclimb lever).
+
+Mesh expert parallelism (``dispatch_impl="sharded"``): experts become slave
+ports *partitioned across a mesh axis* and tokens cross the axis through
+``repro.fabric.ShardedBackend``'s global-WRR ``all_to_all`` — one crossbar
+over the whole mesh instead of local per-group fabrics.  The register file
+is a traced argument end to end, so a live ``Shell`` reconfigures routing
+between jitted steps with zero retraces (see ``moe_apply_sharded`` /
+``moe_forward_sharded`` and ``tests/test_moe_sharded.py``).
 """
 from __future__ import annotations
 
@@ -48,7 +56,9 @@ def expert_capacity(group_tokens: int, moe: MoEConfig, multiple: int = 8) -> int
 def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
               group_size: int = 1024,
               expert_mask: Optional[jax.Array] = None,
-              dispatch_impl: str = "dense"
+              dispatch_impl: str = "dense",
+              registers=None, axis_name: str = "expert",
+              capacity: Optional[int] = None
               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: [B, S, d] -> (y [B, S, d], stats).
 
@@ -64,6 +74,12 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
     movement and no selection tensor (§Perf iteration "moe-gather").
     Identical packet semantics: same ranks, same WRR quota drops.
 
+    "sharded" is mesh expert parallelism: it must run *inside a shard_map*
+    over ``axis_name`` (experts are slave ports partitioned across the
+    axis, tokens cross it via the global-WRR ``all_to_all``) and routes
+    through :func:`moe_apply_sharded` — ``registers``/``capacity`` pass
+    through, ``group_size`` is ignored (the shard is the group).
+
     Any other value names a ``repro.fabric`` backend ("reference",
     "pallas", or a registered custom): the layer then routes every group
     through a ``Fabric.transfer`` round-trip — experts are crossbar slave
@@ -75,6 +91,10 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
     if dispatch_impl == "gather":
         return moe_apply_gather(params, x, moe, act, group_size=group_size,
                                 expert_mask=expert_mask)
+    if dispatch_impl == "sharded":
+        return moe_apply_sharded(params, x, moe, act, registers=registers,
+                                 axis_name=axis_name,
+                                 expert_mask=expert_mask, capacity=capacity)
     if dispatch_impl != "dense":
         return moe_apply_fabric(params, x, moe, act, group_size=group_size,
                                 expert_mask=expert_mask,
@@ -232,18 +252,69 @@ def moe_apply_gather(params, x: jax.Array, moe: MoEConfig, act: str, *,
 
 
 @functools.lru_cache(maxsize=None)
-def _group_fabric(n_experts: int, capacity: int, backend: str):
+def _group_fabric(n_experts: int, capacity: int, backend: str,
+                  axis_name: Optional[str] = None):
     """One cached fabric (and its jit caches) per MoE geometry.
 
     The fabric reads its registers through a mutable cell so the caller
     can swap in the tenant's isolation mask per forward pass — values
     steer routing, the compiled dispatch/combine programs are reused
-    across calls (and across layers sharing a geometry)."""
+    across calls (and across layers sharing a geometry).  ``axis_name``
+    selects the sharded backend's mesh axis (sharded fabrics are keyed
+    per axis so different meshes don't share WRR geometry)."""
     from repro.core.registers import CrossbarRegisters
     from repro.fabric import Fabric
     cell = {"regs": CrossbarRegisters.create(n_experts, capacity=capacity)}
-    fabric = Fabric(lambda: cell["regs"], backend=backend, capacity=capacity)
+    kw = {"axis_name": axis_name} if axis_name is not None else {}
+    fabric = Fabric(lambda: cell["regs"], backend=backend,
+                    capacity=capacity, **kw)
     return fabric, cell
+
+
+def moe_fabric(n_experts: int, capacity: int, backend: str,
+               axis_name: Optional[str] = None):
+    """The cached ``Fabric`` a given MoE geometry dispatches through.
+
+    Exposed so tests and telemetry can read ``fabric.trace_count`` (the
+    zero-retrace-across-reconfiguration regression pin) or attach
+    ``fabric.probe()`` for the layer that serves a geometry."""
+    return _group_fabric(n_experts, capacity, backend, axis_name)[0]
+
+
+def _moe_router(params, xf: jax.Array, moe: MoEConfig,
+                expert_mask: Optional[jax.Array]):
+    """Shared router: flat tokens [T, d] -> (dst [T*k], w [T*k], probs).
+
+    ``dst`` is the packet destination stream (expert = slave port id,
+    token-major, k packets per token) and ``w`` the renormalized top-k
+    combine weights — the single routing semantics every dispatch_impl
+    (and the sharded oracle) agrees on."""
+    E, k = moe.n_experts, moe.top_k
+    logits = jnp.einsum("td,de->te", xf,
+                        params["w_router"]).astype(jnp.float32)
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    dst = top_e.reshape(-1)                                    # [T*k]
+    w = top_p.reshape(-1).astype(xf.dtype)
+    return dst, w, probs
+
+
+def _expert_ffn(slabs: jax.Array, w_in: jax.Array, w_out: jax.Array,
+                act: str) -> jax.Array:
+    """The expert MLP over receive slabs [E?, C, d] (any expert count —
+    the sharded path passes each shard's local expert block)."""
+    h = jnp.einsum("ecd,edf->ecf", slabs, w_in)
+    if act in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        a = jax.nn.silu(gate.astype(jnp.float32)) if act == "swiglu" \
+            else jax.nn.gelu(gate.astype(jnp.float32))
+        h = (a * up.astype(jnp.float32)).astype(slabs.dtype)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(slabs.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
 
 
 def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
@@ -296,15 +367,7 @@ def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
     src = jnp.zeros((g * k,), jnp.int32)
 
     def experts_fn(slabs):                                 # [E, C, d]
-        h = jnp.einsum("ecd,edf->ecf", slabs, params["w_in"])
-        if act in ("swiglu", "geglu"):
-            gate, up = jnp.split(h, 2, axis=-1)
-            a = jax.nn.silu(gate.astype(jnp.float32)) if act == "swiglu" \
-                else jax.nn.gelu(gate.astype(jnp.float32))
-            h = (a * up.astype(jnp.float32)).astype(slabs.dtype)
-        else:
-            h = jax.nn.gelu(h.astype(jnp.float32)).astype(slabs.dtype)
-        return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+        return _expert_ffn(slabs, params["w_in"], params["w_out"], act)
 
     def one_group(xg, dg, wg):
         # dispatch/combine are the fabric's shape-cached jits; the expert
@@ -331,3 +394,193 @@ def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
         "capacity": jnp.asarray(cap),
     }
     return y, stats
+
+
+def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
+                      registers=None, axis_name: str = "expert",
+                      expert_mask: Optional[jax.Array] = None,
+                      capacity: Optional[int] = None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mesh expert parallelism through the sharded fabric backend.
+
+    Must run **inside a shard_map** over ``axis_name`` (use
+    :func:`moe_forward_sharded` for the wrapper): tokens are sharded
+    across the axis (``x`` is this shard's [B_loc, S, d] slice), experts
+    are crossbar slave ports partitioned contiguously across it
+    (``params['w_in']``/``['w_out']`` are this shard's [E_loc, ...]
+    blocks; ``params['w_router']`` is replicated).  Tokens cross the axis
+    via the oracle-equivalent global-WRR ``all_to_all``
+    (``ShardedBackend``), so the expert-parallel data plane and the
+    shell's interconnect are the same implementation.
+
+    ``registers`` is the E-port crossbar register file and stays a
+    *traced argument*: pass it through the enclosing jit/shard_map and a
+    ``Shell.post(Grow/Shrink/FailRegion)`` re-routes the next step with
+    zero retraces (``moe_fabric(E, cap, "sharded", axis).trace_count`` is
+    the regression pin).  Defaults to a fully-open file when omitted.
+
+    Extra stats over the local paths: ``offered_packets`` /
+    ``granted_packets`` (global, ``dropped = offered - granted``),
+    ``counts`` (global per-expert grant histogram) and
+    ``remote_packets`` / ``local_packets`` — packets that crossed the
+    mesh axis vs. stayed on their source shard (the §IV-E crossbar hops
+    that cost ICI bandwidth; ``Fabric.account_stats`` folds them into
+    manager telemetry).
+    """
+    from repro.core.registers import CrossbarRegisters, ErrorCode
+
+    E, k = moe.n_experts, moe.top_k
+    B_loc, S, d = x.shape
+    T_loc = B_loc * S
+    E_loc = params["w_in"].shape[0]
+    if E_loc == 0 or E % E_loc:
+        raise ValueError(
+            f"local expert block ({E_loc}) must divide n_experts ({E}); "
+            f"shard w_in/w_out over the '{axis_name}' mesh axis")
+    n_shards = E // E_loc
+    cap = (capacity if capacity is not None
+           else expert_capacity(T_loc * n_shards, moe))
+    if registers is None:
+        registers = CrossbarRegisters.create(E, capacity=cap)
+    xf = x.reshape(T_loc, d)
+    dst, w, probs = _moe_router(params, xf, moe, expert_mask)
+
+    fabric, _ = _group_fabric(E, cap, "sharded", axis_name)
+    xk = jnp.repeat(xf, k, axis=0)                         # [T_loc*k, d]
+    src = jnp.zeros((T_loc * k,), jnp.int32)               # axis idx wins
+
+    def experts_fn(slabs):                                 # [E_loc, C, d]
+        return _expert_ffn(slabs, params["w_in"], params["w_out"], act)
+
+    y, plan = fabric.transfer(xk, dst, src, apply_fn=experts_fn,
+                              weights=w, registers=registers)
+    y = y.reshape(T_loc, k, d).sum(axis=1).reshape(B_loc, S, d)
+
+    me = jax.lax.axis_index(axis_name)
+    local = jax.lax.psum(
+        jnp.sum((plan.keep & (dst // E_loc == me)).astype(jnp.int32)),
+        axis_name)
+    offered = jnp.asarray(T_loc * k * n_shards, jnp.int32)
+    granted = jnp.sum(plan.counts)
+    frac_tokens = (plan.counts / (T_loc * n_shards * k)).astype(jnp.float32)
+    frac_probs = (jax.lax.psum(jnp.sum(probs, axis=0), axis_name)
+                  / (T_loc * n_shards))
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+    stats = {
+        "aux_loss": aux_loss,
+        "dropped": offered - granted,
+        "iso_dropped": plan.drops[ErrorCode.INVALID_DEST],
+        "capacity": jnp.asarray(cap),
+        "counts": plan.counts,
+        "offered_packets": offered,
+        "granted_packets": granted,
+        "local_packets": local,
+        "remote_packets": granted - local,
+    }
+    return y, stats
+
+
+def moe_apply_sharded_reference(params, x: jax.Array, moe: MoEConfig,
+                                act: str, *, n_shards: int,
+                                registers=None,
+                                expert_mask: Optional[jax.Array] = None,
+                                capacity: Optional[int] = None
+                                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-device oracle for :func:`moe_apply_sharded`.
+
+    Same router, same register file, same stats — but the whole batch on
+    one device through the *reference* backend, with each token's source
+    port set to the shard that would own it (batch is laid out
+    shard-major, exactly the shard_map partition).  The sharded path must
+    match this bit-for-bit on plans and to float tolerance on outputs;
+    the forced-4-device tests pin that.
+    """
+    from repro.core.registers import CrossbarRegisters, ErrorCode
+
+    E, k = moe.n_experts, moe.top_k
+    B, S, d = x.shape
+    T = B * S
+    if B % n_shards or E % n_shards:
+        raise ValueError(f"batch {B} and n_experts {E} must both divide "
+                         f"into {n_shards} shards")
+    T_loc = T // n_shards
+    E_loc = E // n_shards
+    cap = capacity if capacity is not None else expert_capacity(T, moe)
+    if registers is None:
+        registers = CrossbarRegisters.create(E, capacity=cap)
+    xf = x.reshape(T, d)
+    dst, w, probs = _moe_router(params, xf, moe, expert_mask)
+
+    fabric, _ = _group_fabric(E, cap, "reference")
+    xk = jnp.repeat(xf, k, axis=0)
+    src = jnp.repeat(jnp.arange(n_shards, dtype=jnp.int32), T_loc * k)
+
+    def experts_fn(slabs):                                 # [E, C, d]
+        return _expert_ffn(slabs, params["w_in"], params["w_out"], act)
+
+    y, plan = fabric.transfer(xk, dst, src, apply_fn=experts_fn,
+                              weights=w, registers=registers)
+    y = y.reshape(T, k, d).sum(axis=1).reshape(B, S, d)
+
+    local = jnp.sum((plan.keep & (dst // E_loc == src)).astype(jnp.int32))
+    offered = jnp.asarray(T * k, jnp.int32)
+    granted = jnp.sum(plan.counts)
+    frac_tokens = (plan.counts / (T * k)).astype(jnp.float32)
+    aux_loss = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+    stats = {
+        "aux_loss": aux_loss,
+        "dropped": offered - granted,
+        "iso_dropped": plan.drops[ErrorCode.INVALID_DEST],
+        "capacity": jnp.asarray(cap),
+        "counts": plan.counts,
+        "offered_packets": offered,
+        "granted_packets": granted,
+        "local_packets": local,
+        "remote_packets": granted - local,
+    }
+    return y, stats
+
+
+def moe_forward_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
+                        mesh, axis_name: str = "expert", registers=None,
+                        expert_mask: Optional[jax.Array] = None,
+                        capacity: Optional[int] = None
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """The model-side shard_map wrapper around :func:`moe_apply_sharded`.
+
+    Shards ``x`` on its batch dim and the expert-indexed params over
+    ``axis_name``; the register file and router weights stay replicated.
+    Jit this (with ``registers`` as an argument!) and reconfiguration is
+    value-only: ``jax.jit(lambda p, r, xx: moe_forward_sharded(p, xx, ...,
+    registers=r))`` compiles once per shape and every ``Shell.post`` after
+    that re-routes without a retrace.
+    """
+    import functools as _ft
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.registers import CrossbarRegisters
+
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:
+        from jax.experimental.shard_map import shard_map
+    n = mesh.shape[axis_name]
+    T = x.shape[0] * x.shape[1]
+    cap = capacity if capacity is not None else expert_capacity(T, moe)
+    if registers is None:
+        registers = CrossbarRegisters.create(moe.n_experts, capacity=cap)
+    pspec = {"w_router": P(), "w_in": P(axis_name), "w_out": P(axis_name)}
+    in_specs = [pspec, P(axis_name), P()]
+    args = [params, x, registers]
+    if expert_mask is not None:
+        in_specs.append(P())
+        args.append(expert_mask)
+
+    @_ft.partial(shard_map, mesh=mesh, in_specs=tuple(in_specs),
+                 out_specs=(P(axis_name), P()))
+    def run(p, xs, regs, *mask):
+        return moe_apply_sharded(
+            p, xs, moe, act, registers=regs, axis_name=axis_name,
+            expert_mask=mask[0] if mask else None, capacity=cap)
+
+    return run(*args)

@@ -79,7 +79,7 @@ class ServeLoop:
         warnings.warn(
             "DEPRECATED runtime.serve.ServeLoop — migrate to "
             "repro.shell.server.ElasticServer (continuous batching, "
-            "shell-gated routing; see ROADMAP.md migration notes)",
+            "shell-gated routing; see docs/migration.md)",
             DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.model = build_model(cfg)

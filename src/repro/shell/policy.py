@@ -126,6 +126,23 @@ def get_policy(policy) -> PlacementPolicy:
 
 
 def register_policy(cls) -> type:
-    """Register a custom policy class under its ``name`` (decorator-friendly)."""
+    """Register a custom placement policy under its ``name``
+    (decorator-friendly); ``Shell(regions, policy=name)`` then resolves it
+    by string.
+
+    >>> from repro.shell import register_policy, get_policy
+    >>> from repro.shell.policy import FirstFit
+    >>> @register_policy
+    ... class RoomiestFit(FirstFit):
+    ...     name = "roomiest_fit"
+    ...     def choose(self, state, fp):
+    ...         fits = [r for r in state.free_regions()
+    ...                 if fp.fits(r.hbm_bytes)]
+    ...         if not fits:
+    ...             return None
+    ...         return max(fits, key=lambda r: r.hbm_bytes).rid
+    >>> get_policy("roomiest_fit").name
+    'roomiest_fit'
+    """
     _REGISTRY[cls.name] = cls
     return cls

@@ -210,12 +210,6 @@ class ElasticServer:
         self.shell = shell
         self.n_slots = n_slots
         self.fabric = shell.fabric(backend=fabric_backend)
-        self.port_traffic = np.zeros(shell.registers.n_ports, np.int64)
-        # Offered vs granted packets (drop rate = 1 - granted/offered).
-        # Cumulative like ``port_traffic``: reconfigurations re-route, they
-        # never reset the counters.
-        self.offered_packets = 0
-        self.granted_packets = 0
         self.queue: Deque[StreamRequest] = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.completions: List[StreamCompletion] = []
@@ -224,13 +218,60 @@ class ElasticServer:
         self._rid_counter = itertools.count()
         self._stalled = False
 
+    # ---- traffic counters (cumulative; reconfigurations re-route, they
+    # never reset these — the fabric owns the tally, shared with account())
+    @property
+    def port_traffic(self) -> np.ndarray:
+        """Per-port grant counts accumulated over every served tick."""
+        return self.fabric.port_traffic
+
+    @property
+    def offered_packets(self) -> int:
+        """Packets offered to the fabric (drop rate = 1 - granted/offered)."""
+        return self.fabric.offered_packets
+
+    @property
+    def granted_packets(self) -> int:
+        return self.fabric.granted_packets
+
     # ---- engines ------------------------------------------------------
     def register_model(self, app_id: int, cfg, *, max_len: int = 128,
                        seed: int = 0) -> None:
+        """Build and attach a real jitted :class:`ModelEngine` for
+        ``app_id`` from a repro model config::
+
+            server.register_model(0, get_config("tinyllama_1_1b",
+                                                smoke=True))
+
+        (Compiles on first admission — tests usually want
+        :meth:`register_engine` with a lightweight fake instead.)"""
         self._engines[app_id] = ModelEngine(cfg, max_len=max_len, seed=seed)
 
     def register_engine(self, app_id: int, engine: Any) -> None:
-        """Duck-typed engine injection (tests, host-path fallbacks)."""
+        """Duck-typed engine injection: anything with ``prefill(prompt) ->
+        (tok, state)`` and ``decode(tok, state) -> (tok, state)`` (an
+        optional ``prefill_batch`` opts into fused admission).
+
+        >>> import numpy as np
+        >>> from repro.core.elastic import Region
+        >>> from repro.core.module import ModuleFootprint
+        >>> from repro.shell import Shell
+        >>> from repro.shell.server import ElasticServer, StreamRequest
+        >>> GB = 1 << 30
+        >>> shell = Shell([Region(rid=0, n_chips=8, hbm_bytes=8 * GB)])
+        >>> _ = shell.submit("chat", [ModuleFootprint(GB, 1e9, 4096)],
+        ...                  app_id=0)
+        >>> class CountEngine:
+        ...     def prefill(self, prompt): return 100, None
+        ...     def decode(self, tok, state): return tok + 1, state
+        >>> server = ElasticServer(shell, n_slots=2)
+        >>> server.register_engine(0, CountEngine())
+        >>> _ = server.submit(StreamRequest(app_id=0,
+        ...                                 prompt=np.zeros(4, np.int32),
+        ...                                 max_new=3))
+        >>> [c.tokens for c in server.run()]
+        [[100, 101, 102]]
+        """
         self._engines[app_id] = engine
 
     # ---- request path -------------------------------------------------
@@ -318,12 +359,10 @@ class ElasticServer:
                 dst[i] = slot.entry_port
         src = np.full(self.n_slots, self.shell.state.host_port, np.int32)
         plan = self.fabric.plan(jnp.asarray(dst), jnp.asarray(src))
-        granted = int(np.asarray(plan.counts).sum())
-        self.port_traffic += np.asarray(plan.counts, np.int64)
         # Padding slots (dst = -1) are dropped by design; only real slots
-        # count as offered load, so offered - granted is the true drop tally.
-        self.offered_packets += int((dst >= 0).sum())
-        self.granted_packets += granted
+        # count as offered load, so offered - granted is the true drop
+        # tally.  The fabric owns the cumulative counters.
+        self.fabric.account(plan)
 
     def step(self) -> List[StreamCompletion]:
         """One server tick: admit, then one decode token per active slot."""

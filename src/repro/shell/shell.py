@@ -60,7 +60,28 @@ class Shell:
 
     # ---- the seam -----------------------------------------------------
     def post(self, event: ev.Event) -> Plan:
-        """Apply one event: plan purely, swap state, patch registers."""
+        """Apply one event: plan purely, swap state, patch registers.
+
+        The only mutation entry point.  Returns the applied :class:`Plan`
+        (ordered actions + the register delta); invalid events raise
+        ``KeyError``/``ValueError`` *before* any state changes.
+
+        >>> from repro.core.elastic import Region
+        >>> from repro.core.module import ModuleFootprint
+        >>> from repro.shell import FailRegion, Shell, Submit
+        >>> GB = 1 << 30
+        >>> shell = Shell([Region(rid=i, n_chips=8, hbm_bytes=8 * GB)
+        ...                for i in range(2)])
+        >>> fp = ModuleFootprint(param_bytes=GB, flops_per_token=1e9,
+        ...                      activation_bytes_per_token=4096)
+        >>> plan = shell.post(Submit(tenant="a", footprints=(fp, fp),
+        ...                          app_id=0))
+        >>> [a.kind for a in plan.actions], shell.placement_of("a")
+        (['allocate', 'allocate'], [0, 1])
+        >>> plan = shell.post(FailRegion(rid=0))   # demotes module 0
+        >>> shell.placement_of("a"), shell.epoch   # -1 == runs on-server
+        ([-1, 1], 2)
+        """
         new_state, p = plan_event(self._state, event, self.policy)
         self._state = new_state
         self._regs = apply_delta(self._regs, p.delta)

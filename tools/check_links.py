@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Intra-repo markdown link checker (the CI docs gate).
+
+Scans the given markdown files/directories for ``[text](target)`` links,
+skips external schemes (http/https/mailto) and pure anchors, and verifies
+every repo-relative target exists on disk (anchors and query strings are
+stripped).  Exits non-zero listing each broken link as
+``file:line: target``.
+
+    python tools/check_links.py README.md docs ROADMAP.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images' inner ! is fine, same target rules.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(paths):
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+        elif not p.exists():
+            raise FileNotFoundError(f"no such file or directory: {p}")
+
+
+def check_file(md: Path):
+    """Yield (line_number, target) for each broken link in one file."""
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for match in LINK_RE.finditer(line):
+            target = match.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0].split("?", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                yield lineno, target
+
+
+def main(argv=None) -> int:
+    paths = (argv or sys.argv[1:]) or ["README.md"]
+    broken = []
+    checked = 0
+    for md in iter_markdown(paths):
+        checked += 1
+        for lineno, target in check_file(md):
+            broken.append(f"{md}:{lineno}: {target}")
+    for line in broken:
+        print(line)
+    print(f"checked {checked} markdown file(s): "
+          f"{len(broken)} broken intra-repo link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
