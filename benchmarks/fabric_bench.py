@@ -11,25 +11,16 @@ sharded backend needs >1 local device, so its trajectory lives in the
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Tuple
 
 import numpy as np
+
+from benchmarks.timing import time_us
 
 # Small grid: this doubles as the CI smoke bench, so it must stay fast.
 SHAPES = [(256, 4), (1024, 8)]          # (T packets, n_ports)
 D = 64                                   # payload width
 CAPACITY = 512
-
-
-def _time_us(fn, *args, n=3) -> float:
-    import jax
-    jax.block_until_ready(fn(*args))     # compile/warm
-    t0 = time.perf_counter()
-    for _ in range(n):
-        r = fn(*args)
-    jax.block_until_ready(r)
-    return 1e6 * (time.perf_counter() - t0) / n
 
 
 def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
@@ -50,9 +41,9 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
         base_plan = None
         for name in backends:
             fabric = Fabric(regs, backend=name, capacity=CAPACITY)
-            plan_us = _time_us(lambda d, s, f=fabric: f.plan(d, s).counts,
-                               dst, src)
-            transfer_us = _time_us(
+            plan_us = time_us(lambda d, s, f=fabric: f.plan(d, s).counts,
+                              dst, src)
+            transfer_us = time_us(
                 lambda xx, d, s, f=fabric: f.transfer(xx, d, s)[0],
                 x, dst, src)
             plan = fabric.plan(dst, src)
@@ -72,6 +63,7 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
         "note": ("CPU wall time (pallas in interpret mode); the trajectory "
                  "tracks relative backend cost, TPU perf is the roofline's "
                  "job"),
+        "timing": "warmup + median of 5 device-synced samples",
         "device_count": str(jax.device_count()),
         "sharded": "see BENCH_moe.json (forced multi-device subprocess)"
         if jax.device_count() < 2 else "see rows",

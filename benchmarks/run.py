@@ -1,5 +1,8 @@
 """Benchmark driver: one function per paper table/figure + the roofline
-aggregation. Prints a readable report and writes benchmarks/results.json.
+aggregation. Prints a readable report and overwrites the schema'd
+``benchmarks/BENCH_*.json`` perf trajectories in place (the committed,
+PR-over-PR diffable record; the old catch-all ``results.json`` scratch
+file is gone).
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig5 area  # subset
@@ -62,9 +65,6 @@ def main(argv=None) -> int:
         print("  claims: " + json.dumps(claims))
         results[name] = {"rows": rows, "claims": claims}
 
-    out = Path(__file__).resolve().parent / "results.json"
-    out.write_text(json.dumps(results, indent=1, default=str))
-    print(f"\nwrote {out}")
     for name, fname in TRAJECTORY_FILES.items():
         if name not in results:
             continue

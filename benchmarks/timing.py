@@ -1,0 +1,31 @@
+"""Shared wall-clock timing for the benchmark suite.
+
+One discipline for every timed bench: a warmup pass (compile + caches),
+then k independently-synced samples, report the **median**.  Every sample
+brackets a full ``jax.block_until_ready`` on the result pytree, so async
+dispatch can't smear one iteration's device work into the next — the
+single-mean-over-a-hot-loop the benches used before let the cheapest
+sample dominate and turned the ``BENCH_*.json`` trajectories into noise.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+
+def time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of ``fn(*args)`` in microseconds.
+
+    ``warmup`` un-timed calls absorb compilation; each of the ``iters``
+    timed calls is individually synchronized with ``block_until_ready``.
+    """
+    import jax
+
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(1e6 * (time.perf_counter() - t0))
+    return statistics.median(samples)

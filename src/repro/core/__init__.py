@@ -9,7 +9,9 @@
 - ``repro.core.elastic``   — the Elastic Resource Manager control plane.
 """
 from repro.core.registers import CrossbarRegisters, ErrorCode, validate_registers
-from repro.core.arbiter import DispatchPlan, wrr_dispatch_plan, dispatch, combine
+from repro.core.arbiter import (DispatchPlan, wrr_dispatch_plan, wrr_slots,
+                                dispatch, combine, dispatch_dense,
+                                combine_dense, flat_slot_addr)
 from repro.core.crossbar import (
     CrossbarInterconnect, exchange_local, combine_local,
     exchange_sharded, combine_sharded, pairwise_dispatch_plan,
@@ -19,7 +21,8 @@ from repro.core.elastic import ElasticResourceManager, Region, ON_SERVER
 
 __all__ = [
     "CrossbarRegisters", "ErrorCode", "validate_registers",
-    "DispatchPlan", "wrr_dispatch_plan", "dispatch", "combine",
+    "DispatchPlan", "wrr_dispatch_plan", "wrr_slots", "dispatch", "combine",
+    "dispatch_dense", "combine_dense", "flat_slot_addr",
     "CrossbarInterconnect", "exchange_local", "combine_local",
     "exchange_sharded", "combine_sharded", "pairwise_dispatch_plan",
     "ComputationModule", "ModuleChain", "ModuleFootprint", "module_from_layer",

@@ -10,16 +10,26 @@ one-shot rank computation over a batch of packets:
 - **quota** — packet rank within its (src, dst) stream must be below the
   register-file quota for that pair (bandwidth allocation in packages);
 - **WRR order** — granted packets for a destination are served round-robin at
-  package granularity: slot order sorts by (intra-stream rank, src), which is
-  exactly the order the rotating-priority hardware arbiter produces for
-  single-package sessions;
+  package granularity: the closed form :func:`wrr_slots` places each packet
+  at its lexicographic (round, source) position, which is exactly the order
+  the rotating-priority hardware arbiter produces for single-package
+  sessions;
 - **capacity** — a destination accepts ``capacity[dst]`` packets (slave
   register depth; on TPU, the expert/stage buffer size). Overflow packets get
   the ACK_TIMEOUT error, quota-deferred packets GRANT_TIMEOUT, isolation
   violations INVALID_DEST — the paper's error codes, per packet.
 
+The data movement is **scatter-native**: ``dispatch`` writes granted packets
+straight into the flat ``dst * capacity + slot`` row of the receive slab with
+``.at[addr].add`` (slots are globally unique per destination, so add == set)
+and ``combine`` reads them back with a ``jnp.take`` row gather — O(T·D)
+bytes, no [T, S, C] selection tensor.  The historical dense one-hot/einsum
+formulations survive as :func:`dispatch_dense` / :func:`combine_dense`: they
+are the semantics oracles the property suite pins the scatter paths against
+bit-for-bit, not a production path.
+
 Everything below is pure ``jnp`` and jit/vmap/shard_map-safe; it is also the
-oracle for the ``crossbar_dispatch`` Pallas kernel.
+oracle for the ``crossbar_dispatch`` Pallas kernels.
 """
 from __future__ import annotations
 
@@ -45,6 +55,46 @@ class DispatchPlan:
     drops: jax.Array       # [4] int32 — histogram over error codes
 
 
+def wrr_slots(rank: jax.Array, granted: jax.Array, dstc: jax.Array,
+              src_index) -> jax.Array:
+    """Closed-form WRR interleave shared by *every* plan implementation.
+
+    Position of (``rank``, source) in the lexicographic (round, source)
+    grant order of each packet's destination — exactly the rotating
+    arbiter's service order, given ``granted[src, dst]`` iso+quota-passing
+    counts.  ``src_index`` is a per-packet [T] source array (broadcast as
+    ``srcc[None, :]``) or this shard's scalar index; the oracle
+    equivalence of every backend rests on this one function.
+    """
+    n = granted.shape[0]
+    g_at = granted[:, dstc]                                  # [n, T]
+    slot = jnp.sum(jnp.minimum(rank[None, :], g_at), axis=0)
+    return slot + jnp.sum(
+        ((jnp.arange(n)[:, None] < src_index)
+         & (g_at > rank[None, :])).astype(jnp.int32), axis=0)
+
+
+def _stream_ranks(pair: jax.Array, alive: jax.Array,
+                  n_streams: int) -> jax.Array:
+    """Exclusive rank of each packet within its ``pair`` stream.
+
+    Segment-cumsum via one stable sort: packets are ordered by stream id
+    (dead packets sink into an overflow bucket), each packet's rank is its
+    distance from the start of its run, and the result scatters back to
+    packet order.  O(T log T) with O(T) memory — no [T, n^2] one-hot.
+    """
+    T = pair.shape[0]
+    bucket = jnp.where(alive, pair, jnp.int32(n_streams))
+    order = jnp.argsort(bucket, stable=True)
+    sorted_bucket = bucket[order]
+    t_ix = jnp.arange(T, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_bucket[1:] != sorted_bucket[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, t_ix, 0))
+    rank = jnp.zeros((T,), jnp.int32).at[order].set(t_ix - run_start)
+    return jnp.where(alive, rank, 0)
+
+
 def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
                       regs: CrossbarRegisters) -> DispatchPlan:
     """Compute grants/slots for packets ``t`` with ``src[t] -> dst[t]``.
@@ -56,7 +106,6 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
     agrees on the padded plan.
     """
     n = regs.n_ports
-    T = dst.shape[0]
     dst = dst.astype(jnp.int32)
     src = src.astype(jnp.int32)
     in_range = (dst >= 0) & (dst < n) & (src >= 0) & (src < n)
@@ -67,35 +116,23 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
     iso_ok = (in_range & regs.allowed[srcc, dstc]
               & ~regs.reset[srcc] & ~regs.reset[dstc])
 
-    # --- per-(src,dst) stream rank --------------------------------------
+    # --- per-(src,dst) stream rank (segment cumsum, no pair one-hot) ----
     pair = srcc * n + dstc                                  # [T]
-    pair_oh = jax.nn.one_hot(pair, n * n, dtype=jnp.int32)  # [T, n*n]
-    pair_oh = pair_oh * iso_ok[:, None].astype(jnp.int32)
-    rank_sd = (jnp.cumsum(pair_oh, axis=0) - pair_oh)       # exclusive cumsum
-    rank_sd = jnp.take_along_axis(rank_sd, pair[:, None], axis=1)[:, 0]
+    rank_sd = _stream_ranks(pair, iso_ok, n * n)
 
     quota = regs.quota[dstc, srcc]
     quota_ok = (quota == 0) | (rank_sd < quota)
 
     granted_pre = iso_ok & quota_ok
 
-    # --- WRR slot order: (round=rank_sd, src) round-robin per destination
-    # Composite sort key; smaller key = earlier grant. Ungranted packets get
-    # +inf-like keys so they never displace granted ones.
-    big = jnp.int32(T + 1)
-    key = rank_sd * n + srcc                                # round-major WRR
-    sort_key = jnp.where(granted_pre, key, big * n)
-    # Destination-local rank of each granted packet under the WRR order:
-    # count of packets with the same dst and strictly smaller (key, t).
-    dst_oh = jax.nn.one_hot(dstc, n, dtype=jnp.int32)       # [T, n]
-    dst_oh = dst_oh * in_range[:, None].astype(jnp.int32)
-    order = jnp.argsort(sort_key * jnp.int32(T) + jnp.arange(T, dtype=jnp.int32))
-    # scatter: position in sorted order, restricted per destination.
-    sorted_dst_oh = dst_oh[order] * granted_pre[order, None].astype(jnp.int32)
-    slots_sorted = jnp.cumsum(sorted_dst_oh, axis=0) - sorted_dst_oh
-    slot_of_sorted = jnp.take_along_axis(
-        slots_sorted, dstc[order][:, None], axis=1)[:, 0]
-    slot = jnp.zeros((T,), jnp.int32).at[order].set(slot_of_sorted)
+    # --- WRR slot order: the shared closed form over per-pair counts ----
+    # Granted ranks are a prefix of each stream (quota cuts at rank <
+    # quota), so the (round, source) position is computable from the
+    # granted counts alone — the same composition the pallas and sharded
+    # backends use.
+    granted = jnp.zeros((n, n), jnp.int32).at[srcc, dstc].add(
+        granted_pre.astype(jnp.int32))
+    slot = wrr_slots(rank_sd, granted, dstc, srcc[None, :])
 
     cap_ok = slot < regs.capacity[dstc]
     keep = granted_pre & cap_ok
@@ -105,19 +142,66 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
               jnp.where(~cap_ok, jnp.int32(ErrorCode.ACK_TIMEOUT),
                         jnp.int32(ErrorCode.OK))))
 
-    counts = jnp.sum(dst_oh * keep[:, None].astype(jnp.int32), axis=0)
+    counts = jnp.zeros((n,), jnp.int32).at[dstc].add(keep.astype(jnp.int32))
     drops = jnp.zeros((4,), jnp.int32).at[error].add(1)
     return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0), dst=dst,
                         error=error, counts=counts, drops=drops)
+
+
+def flat_slot_addr(plan: DispatchPlan, n_ports: int,
+                   capacity: int) -> jax.Array:
+    """Per-packet flat receive-slab row ``dst * capacity + slot``; dropped
+    packets point at the trash row ``n_ports * capacity``.  The one address
+    convention the scatter dispatch, gather combine and sharded
+    ``all_to_all`` routes all share.
+
+    Slots at or beyond ``capacity`` also route to the trash row: a caller
+    may pass a smaller slab than the plan granted into (the dense oracle's
+    one-hot silently dropped those rows; the flat address must not let them
+    alias the next destination's rows)."""
+    dstc = jnp.clip(plan.dst, 0, n_ports - 1)
+    ok = plan.keep & (plan.slot < capacity)
+    return jnp.where(ok, dstc * capacity + plan.slot,
+                     jnp.int32(n_ports * capacity))
 
 
 def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
              capacity: int) -> jax.Array:
     """Scatter packets [T, D] into destination slabs [n_ports, capacity, D].
 
-    Dense one-hot formulation (MXU-friendly); the Pallas kernel replaces this
-    with a blockwise scatter when T is large.
+    Granted slots are unique per destination, so ``.at[addr].add`` into the
+    flat [S*C, D] slab (plus one trash row for drops) is an exact scatter —
+    bit-identical to :func:`dispatch_dense`, at O(T*D) work and memory.
     """
+    T, D = x.shape
+    addr = flat_slot_addr(plan, n_ports, capacity)
+    slab = jnp.zeros((n_ports * capacity + 1, D), x.dtype).at[addr].add(x)
+    return slab[:n_ports * capacity].reshape(n_ports, capacity, D)
+
+
+def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:
+    """Gather destination slabs [S, C, D] back to packets [T, D], weighted.
+
+    A ``jnp.take`` row gather at the same flat address the dispatch
+    scattered to; packets that were dropped receive zeros (the module sees
+    its error code in the register file — the residual stream carries them
+    unchanged upstream).  Bit-identical to :func:`combine_dense`.
+    """
+    S, C, D = y.shape
+    ok = plan.keep & (plan.slot < C)
+    addr = jnp.clip(plan.dst, 0, S - 1) * C + jnp.where(ok, plan.slot, 0)
+    out = jnp.take(y.reshape(S * C, D), addr, axis=0)
+    return out * (ok.astype(y.dtype) * weights)[:, None]
+
+
+# ----------------------------------------------------------------------
+# dense one-hot/einsum formulations — test-only semantics oracles
+# ----------------------------------------------------------------------
+def dispatch_dense(x: jax.Array, plan: DispatchPlan, n_ports: int,
+                   capacity: int) -> jax.Array:
+    """Dense one-hot/MXU oracle for :func:`dispatch` (O(T*S*C*D) work and an
+    explicit [T, S, C] selection tensor).  Kept for the property suite; the
+    production path is the scatter."""
     T, D = x.shape
     dst_oh = jax.nn.one_hot(plan.dst, n_ports, dtype=x.dtype)
     slot_oh = jax.nn.one_hot(plan.slot, capacity, dtype=x.dtype)
@@ -126,12 +210,10 @@ def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
     return jnp.einsum("tsc,td->scd", comb, x)
 
 
-def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:
-    """Gather destination slabs [S, C, D] back to packets [T, D], weighted.
-
-    Packets that were dropped receive zeros (the module sees its error code in
-    the register file — the residual stream carries them unchanged upstream).
-    """
+def combine_dense(y: jax.Array, plan: DispatchPlan,
+                  weights: jax.Array) -> jax.Array:
+    """Dense one-hot/MXU oracle for :func:`combine` (see
+    :func:`dispatch_dense`)."""
     S, C, D = y.shape
     dst_oh = jax.nn.one_hot(plan.dst, S, dtype=y.dtype)
     slot_oh = jax.nn.one_hot(plan.slot, C, dtype=y.dtype)

@@ -7,28 +7,44 @@ plan-equivalent: identical ``keep``/``slot``/``error``/``counts`` for the
 same packets and registers (property-tested against the dense oracle in
 ``tests/test_fabric.py``).
 
-- ``reference`` — the dense one-hot/MXU oracle (``repro.core.arbiter``).
-  O(T^2) selection tensors; the semantics ground truth.
-- ``pallas``    — the blockwise TPU kernels (``repro.kernels
-  .crossbar_dispatch``).  The per-source plan kernel is swept once per
-  master port and the per-stream ranks are composed into the global WRR
-  slot order with a closed form (no sort):
+All three backends share the **scatter-native data plane** of
+``repro.core.arbiter``: granted packets scatter straight into the flat
+``dst * capacity + slot`` slab row with ``.at[addr].add`` and gather back
+with ``jnp.take`` — O(T·D) bytes, no [T, S, C] selection tensor (the dense
+one-hot/einsum formulations survive as ``arbiter.dispatch_dense`` /
+``combine_dense``, test-only oracles).  What distinguishes the backends is
+how the *plan* is computed and where the slabs live:
+
+- ``reference`` — the pure-jnp plan oracle (``arbiter.wrr_dispatch_plan``:
+  segment-cumsum stream ranks + the closed-form WRR slots).  The
+  semantics ground truth.
+- ``pallas``    — ONE fused multi-source plan kernel (``repro.kernels
+  .crossbar_dispatch.ops._plan_multi``) grids over token blocks once and
+  computes every (src, dst) stream's ranks and iso/quota verdicts in a
+  single sweep — no per-master-port launches, no stacked [n, T]
+  intermediates.  Ranks compose into global WRR slots with the shared
+  closed form (``arbiter.wrr_slots``):
 
       slot(t) = sum_s' min(rank_t, granted[s', dst_t])
               + #{s' < src_t : granted[s', dst_t] > rank_t}
 
   which is exactly the lexicographic (round, source) position the rotating
   arbiter serves.  Token padding to the kernel block size is internal
-  (``dst = -1`` rows drop via the isolation check).
-- ``sharded``   — regions are shards of a mesh axis; dispatch is an
-  ``all_to_all`` of per-destination send slabs, combine an ``all_gather``
-  of result slabs.  Methods must run inside ``shard_map`` over the axis;
-  the per-source granted counts are ``all_gather``-ed so every shard
-  computes the same global WRR slots the dense oracle assigns.  The
-  register file's port space may be *larger* than the axis: ``n_ports``
-  destinations partition contiguously into ``n_ports // axis_size`` slave
-  ports per shard (MoE expert parallelism: experts are slave ports, each
-  shard owns an expert block), while source ids stay the axis indices.
+  (``dst = -1`` rows drop via the isolation check).  Data movement uses
+  the shared scatter path by default; ``data_plane="kernel"`` selects the
+  historical blockwise MXU scatter/combine kernels instead.
+- ``sharded``   — regions are shards of a mesh axis; dispatch scatters
+  local packets into a flat send slab and ``all_to_all``s it, combine
+  routes *addresses* across the axis (a second ``all_to_all`` pair) so
+  each shard pulls exactly its own packets' result rows — bytes on the
+  interconnect scale with packets, not with ``n_ports * capacity`` slabs.
+  Methods must run inside ``shard_map`` over the axis; the per-source
+  granted counts are ``all_gather``-ed so every shard computes the same
+  global WRR slots the dense oracle assigns.  The register file's port
+  space may be *larger* than the axis: ``n_ports`` destinations partition
+  contiguously into ``n_ports // axis_size`` slave ports per shard (MoE
+  expert parallelism: experts are slave ports, each shard owns an expert
+  block), while source ids stay the axis indices.
 
 Packets carry *values*, never shapes, from the register file — so an ERM
 register rewrite re-routes traffic through already-compiled dispatch code.
@@ -41,7 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import arbiter
-from repro.core.arbiter import DispatchPlan
+from repro.core.arbiter import DispatchPlan, wrr_slots
 from repro.core.registers import CrossbarRegisters, ErrorCode
 
 
@@ -55,30 +71,19 @@ def _empty_plan(dst: jax.Array, n_ports: int) -> DispatchPlan:
                         drops=jnp.zeros((4,), jnp.int32))
 
 
-def _wrr_slots(rank: jax.Array, granted: jax.Array, dstc: jax.Array,
-               src_index) -> jax.Array:
-    """Closed-form WRR interleave shared by the pallas/sharded backends.
-
-    Position of (``rank``, source) in the lexicographic (round, source)
-    grant order of each packet's destination — exactly the rotating
-    arbiter's service order, given ``granted[src, dst]`` iso+quota-passing
-    counts.  ``src_index`` is a per-packet [T] source array or this
-    shard's scalar index; the oracle equivalence of every backend rests on
-    this one function.
-    """
-    n = granted.shape[0]
-    g_at = granted[:, dstc]                                  # [n, T]
-    slot = jnp.sum(jnp.minimum(rank[None, :], g_at), axis=0)
-    return slot + jnp.sum(
-        ((jnp.arange(n)[:, None] < src_index)
-         & (g_at > rank[None, :])).astype(jnp.int32), axis=0)
+# The closed-form WRR interleave every backend composes slots with now
+# lives beside the plan oracle; re-exported here for compatibility.
+_wrr_slots = wrr_slots
 
 
 # ----------------------------------------------------------------------
-# reference — dense one-hot oracle
+# reference — pure-jnp plan oracle + shared scatter data plane
 # ----------------------------------------------------------------------
 class ReferenceBackend:
-    """Dense one-hot/MXU formulation; the plan-semantics ground truth."""
+    """The plan-semantics ground truth (``arbiter.wrr_dispatch_plan``),
+    moving packets through the shared scatter/gather path.  The dense
+    one-hot formulations it used to run live on as ``arbiter
+    .dispatch_dense`` / ``combine_dense``, the property suite's oracles."""
 
     name = "reference"
 
@@ -101,19 +106,37 @@ class ReferenceBackend:
 # pallas — blockwise kernels + closed-form WRR slot composition
 # ----------------------------------------------------------------------
 class PallasBackend:
-    """Blockwise Pallas kernels; padding and multi-source composition are
-    handled here so callers never see block sizes or ``dst = -1`` rows."""
+    """Fused multi-source plan kernel + scatter-native data movement.
+
+    ``plan`` is ONE kernel launch: a single grid sweep over token blocks
+    computes every (src, dst) stream's ranks and iso/quota verdicts at
+    once (``_plan_multi``), and the global WRR slots compose from the
+    granted-count matrix with the shared closed form.  Padding and the
+    zero-packet edge are handled here so callers never see block sizes or
+    ``dst = -1`` rows.
+
+    ``data_plane`` selects how packets move: ``"scatter"`` (default) is
+    the shared flat-address scatter/gather of ``repro.core.arbiter`` —
+    XLA-native dynamic scatter, O(T·D) bytes; ``"kernel"`` keeps the
+    historical blockwise MXU one-hot kernels (scatter re-expressed as a
+    matmul) for experimentation on hardware where that wins.
+    """
 
     name = "pallas"
 
     def __init__(self, *, block_t: int = 256,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 data_plane: str = "scatter"):
+        if data_plane not in ("scatter", "kernel"):
+            raise ValueError(f"data_plane must be 'scatter' or 'kernel', "
+                             f"got {data_plane!r}")
         self.block_t = block_t
         self.interpret = interpret
+        self.data_plane = data_plane
 
     def plan(self, dst: jax.Array, src: jax.Array,
              regs: CrossbarRegisters) -> DispatchPlan:
-        from repro.kernels.crossbar_dispatch.ops import _plan as kernel_plan
+        from repro.kernels.crossbar_dispatch.ops import _plan_multi
         n = regs.n_ports
         T = dst.shape[0]
         if T == 0:
@@ -122,27 +145,17 @@ class PallasBackend:
         src = src.astype(jnp.int32)
         dstc = jnp.clip(dst, 0, n - 1)
         srcc = jnp.clip(src, 0, n - 1)
-        # Fold reset gating into the isolation rows the kernel consumes.
+        # Fold reset gating into the isolation matrix the kernel consumes;
+        # quota is stored [dst, src] in the register file, the kernel
+        # indexes [src, dst].
         allowed_eff = (regs.allowed & ~regs.reset[:, None]
                        & ~regs.reset[None, :]).astype(jnp.int32)
-        # Per-source sweep with capacity disabled: the kernel yields the
-        # per-(src, dst) stream ranks + iso/quota verdicts; masking other
-        # sources' packets to dst = -1 drops them from this stream.
-        nocap = jnp.full((n,), jnp.int32(T + 1))
-        keeps, ranks, errs, cnts = [], [], [], []
-        for s in range(n):
-            k, r, e, c = kernel_plan(
-                jnp.where(src == s, dst, -1), allowed_eff[s],
-                regs.quota[:, s], nocap, block_t=self.block_t,
-                interpret=self.interpret)
-            keeps.append(k), ranks.append(r), errs.append(e), cnts.append(c)
-        t_ix = jnp.arange(T)
-        keep_pre = jnp.stack(keeps)[srcc, t_ix] > 0          # iso & quota
-        rank = jnp.stack(ranks)[srcc, t_ix]
-        err_pre = jnp.stack(errs)[srcc, t_ix]
-        granted = jnp.stack(cnts)                            # [src, dst]
+        keep_pre, rank, err_pre, granted = _plan_multi(
+            dst, src, allowed_eff, regs.quota.T, block_t=self.block_t,
+            interpret=self.interpret)
+        keep_pre = keep_pre > 0                              # iso & quota
 
-        slot = _wrr_slots(rank, granted, dstc, srcc[None, :])
+        slot = wrr_slots(rank, granted, dstc, srcc[None, :])
         cap_ok = slot < regs.capacity[dstc]
         keep = keep_pre & cap_ok
         error = jnp.where(err_pre != ErrorCode.OK, err_pre,
@@ -156,6 +169,8 @@ class PallasBackend:
 
     def dispatch(self, x: jax.Array, plan: DispatchPlan,
                  regs: CrossbarRegisters, capacity: int) -> jax.Array:
+        if self.data_plane == "scatter":
+            return arbiter.dispatch(x, plan, regs.n_ports, capacity)
         from repro.kernels.crossbar_dispatch.ops import \
             _dispatch as kernel_dispatch
         return kernel_dispatch(x, plan.dst, plan.keep.astype(jnp.int32),
@@ -165,6 +180,8 @@ class PallasBackend:
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
                 weights: jax.Array) -> jax.Array:
+        if self.data_plane == "scatter":
+            return arbiter.combine(y, plan, weights)
         from repro.kernels.crossbar_dispatch.ops import \
             _combine as kernel_combine
         return kernel_combine(y, plan.dst, plan.keep.astype(jnp.int32),
@@ -220,17 +237,15 @@ class ShardedBackend:
         dstc = jnp.clip(dst, 0, n_dst - 1)
         iso_ok = (in_range & regs.allowed[me, dstc]
                   & ~regs.reset[me] & ~regs.reset[dstc])
-        dst_oh = (jax.nn.one_hot(dstc, n_dst, dtype=jnp.int32)
-                  * iso_ok[:, None].astype(jnp.int32))
-        rank = jnp.cumsum(dst_oh, axis=0) - dst_oh
-        rank = jnp.take_along_axis(rank, dstc[:, None], axis=1)[:, 0]
+        rank = arbiter._stream_ranks(dstc, iso_ok, n_dst)
         quota = regs.quota[dstc, me]
         keep_pre = iso_ok & ((quota == 0) | (rank < quota))
 
         # Global WRR slots from the all-gathered per-source granted counts.
-        mine = jnp.sum(dst_oh * keep_pre[:, None].astype(jnp.int32), axis=0)
+        mine = jnp.zeros((n_dst,), jnp.int32).at[dstc].add(
+            keep_pre.astype(jnp.int32))
         granted = jax.lax.all_gather(mine, ax)               # [src, dst]
-        slot = _wrr_slots(rank, granted, dstc, me)
+        slot = wrr_slots(rank, granted, dstc, me)
         cap_ok = slot < regs.capacity[dstc]
         keep = keep_pre & cap_ok
         error = jnp.where(
@@ -252,17 +267,17 @@ class ShardedBackend:
         """Local packets [T_loc, D] -> this shard's receive slabs [P, C, D]
         (``P = ports_per_shard`` — the shard's contiguous slave-port block).
 
-        Slots are globally unique per destination, so the per-source
-        contributions coming out of the ``all_to_all`` just sum."""
+        The send slab is scatter-built at the shared flat ``dst * C +
+        slot`` address (no [T, n_dst, C] selection tensor); slots are
+        globally unique per destination, so the per-source contributions
+        coming out of the ``all_to_all`` just sum."""
         n_src = _axis_size(self.axis_name)
         n_dst = regs.n_ports
         pps = self.ports_per_shard(regs)
-        dst_oh = jax.nn.one_hot(plan.dst, n_dst, dtype=x.dtype)  # -1 -> 0 row
-        slot_oh = jax.nn.one_hot(plan.slot, capacity, dtype=x.dtype)
-        sel = (dst_oh[:, :, None] * slot_oh[:, None, :]
-               * plan.keep[:, None, None].astype(x.dtype))
-        send = jnp.einsum("tsc,td->scd", sel, x)             # [n_dst, C, D]
-        send = send.reshape(n_src, pps, capacity, x.shape[-1])
+        D = x.shape[-1]
+        addr = arbiter.flat_slot_addr(plan, n_dst, capacity)
+        send = jnp.zeros((n_dst * capacity + 1, D), x.dtype).at[addr].add(x)
+        send = send[:n_dst * capacity].reshape(n_src, pps, capacity, D)
         recv = jax.lax.all_to_all(send, self.axis_name, split_axis=0,
                                   concat_axis=0, tiled=False)
         return jnp.sum(recv, axis=0)                         # [P, C, D]
@@ -271,15 +286,52 @@ class ShardedBackend:
                 weights: jax.Array) -> jax.Array:
         """Local result slabs [P, C, D] -> local packets [T_loc, D], weighted.
 
-        Result slabs are all-gathered (every source reads the rows its
-        packets landed in); dropped packets get zeros."""
-        n_src = _axis_size(self.axis_name)
-        pps, C = y.shape[0], y.shape[1]
-        slabs = jax.lax.all_gather(y, self.axis_name)        # [S, P, C, D]
-        flat = slabs.reshape(n_src * pps * C, -1)            # port-major
-        addr = jnp.clip(plan.dst, 0, n_src * pps - 1) * C + plan.slot
-        out = jnp.take(flat, addr, axis=0)
-        return out * (plan.keep.astype(y.dtype) * weights)[:, None]
+        Address-route gather: each source shard sends, per destination
+        shard, the local slab rows its packets occupy (one ``all_to_all``
+        of int addresses), the destination gathers those rows out of its
+        own [P, C, D] block, and a second ``all_to_all`` carries them
+        home.  Bytes on the interconnect are O(packets · D) — the
+        all-gather of *entire* result slabs this replaces shipped the full
+        [n_src, P, C, D] capacity surface to every shard, even though each
+        source only reads its own packets' rows.  Dropped packets get
+        zeros."""
+        ax = self.axis_name
+        n_src = _axis_size(ax)
+        pps, C, D = y.shape
+        n_dst = n_src * pps
+        T = plan.dst.shape[0]
+        if T == 0 or C == 0:        # nothing sent / nothing grantable
+            return jnp.zeros((T, D), y.dtype)
+        # Row budget per (source, destination-shard) lane: a source cannot
+        # land more packets on one shard than it has packets, nor more than
+        # the shard's port block holds.
+        W = min(T, pps * C)
+        dstc = jnp.clip(plan.dst, 0, n_dst - 1)
+        dshard = dstc // pps
+        # Over-slab slots drop like everywhere else on the scatter data
+        # plane (the dispatch trashed them via ``flat_slot_addr``); without
+        # this guard the clip below would alias them onto the last row.
+        keep = plan.keep & (plan.slot < C)
+        # Position of each kept packet within its destination-shard group.
+        pos = arbiter._stream_ranks(dshard, keep, n_src)
+        local_addr = (dstc % pps) * C + plan.slot            # row in dest's y
+        # Scatter addresses into the per-destination-shard send lanes
+        # (lane W is the trash slot for drops; -1 marks empty rows).
+        lane = dshard * (W + 1) + jnp.where(keep, jnp.minimum(pos, W), W)
+        addr_send = jnp.full((n_src * (W + 1),), -1, jnp.int32).at[lane].set(
+            jnp.where(keep, local_addr, -1))
+        addr_send = addr_send.reshape(n_src, W + 1)[:, :W]
+        addr_recv = jax.lax.all_to_all(addr_send, ax, split_axis=0,
+                                       concat_axis=0, tiled=False)
+        rows = jnp.take(y.reshape(pps * C, D),
+                        jnp.clip(addr_recv, 0, pps * C - 1), axis=0)
+        rows = rows * (addr_recv >= 0).astype(y.dtype)[..., None]
+        back = jax.lax.all_to_all(rows, ax, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        flat = back.reshape(n_src * W, D)
+        out = jnp.take(flat, jnp.clip(dshard * W + jnp.minimum(pos, W - 1),
+                                      0, n_src * W - 1), axis=0)
+        return out * (keep.astype(y.dtype) * weights)[:, None]
 
 
 # ----------------------------------------------------------------------

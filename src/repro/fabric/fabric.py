@@ -85,6 +85,11 @@ class Fabric:
         self.granted_packets = 0
         self.remote_packets = 0         # granted into another shard's ports
         self.local_packets = 0          # granted into the source's own ports
+        # Per-destination-port splits of the remote/local tallies — the
+        # manager ranks individual Migrate moves by the remote (ICI-costing)
+        # traffic of the port they would relocate.
+        self.remote_port_traffic = np.zeros(self.registers.n_ports, np.int64)
+        self.local_port_traffic = np.zeros(self.registers.n_ports, np.int64)
         self._trace_counts = {"plan": 0, "dispatch": 0, "combine": 0,
                               "transfer": 0}
         self._jit_plan = jax.jit(self._plan_impl)
@@ -135,7 +140,9 @@ class Fabric:
         grants also split into ``local_packets`` (granted into the source
         shard's own contiguous port block) vs ``remote_packets`` (granted
         across the mesh axis — the §IV-E crossbar hops that actually cost
-        ICI bandwidth); the manager's ``Signals`` surfaces both.
+        ICI bandwidth), each with a per-port vector
+        (``local_port_traffic`` / ``remote_port_traffic``); the manager's
+        ``Signals`` surfaces all of them.
         """
         self._add_counts(plan.counts)
         dst = np.asarray(plan.dst)
@@ -144,10 +151,20 @@ class Fabric:
         granted = int(keep.sum())
         self.granted_packets += granted
         if src_shard is not None and n_shards:
-            pps = max(1, self.port_traffic.shape[0] // n_shards)
-            local = int((keep & (dst // pps == src_shard)).sum())
+            # Port space comes from the PLAN, not the cumulative vectors —
+            # those may be longer (a wider register file was accounted
+            # earlier, or the file shrank) and would skew pps/shapes.
+            counts = np.asarray(plan.counts, np.int64)
+            n = counts.shape[0]
+            pps = max(1, n // n_shards)
+            is_local = keep & (dst // pps == src_shard)
+            local_counts = np.bincount(np.clip(dst, 0, n - 1),
+                                       weights=is_local.astype(np.int64),
+                                       minlength=n).astype(np.int64)[:n]
+            local = int(local_counts.sum())
             self.local_packets += local
             self.remote_packets += granted - local
+            self._add_split_counts(local_counts, counts - local_counts)
 
     def account_stats(self, stats) -> None:
         """Fold a sharded-MoE ``stats`` mapping (the second return of
@@ -160,14 +177,31 @@ class Fabric:
         self.granted_packets += int(stats.get("granted_packets", 0))
         self.remote_packets += int(stats.get("remote_packets", 0))
         self.local_packets += int(stats.get("local_packets", 0))
+        if "local_counts" in stats or "remote_counts" in stats:
+            n = self.port_traffic.shape[0]
+            self._add_split_counts(
+                np.asarray(stats.get("local_counts", np.zeros(n)), np.int64),
+                np.asarray(stats.get("remote_counts", np.zeros(n)), np.int64))
+
+    @staticmethod
+    def _grow_to(vec: np.ndarray, n: int) -> np.ndarray:
+        if n <= vec.shape[0]:
+            return vec
+        grown = np.zeros(n, np.int64)
+        grown[:vec.shape[0]] = vec
+        return grown
 
     def _add_counts(self, counts) -> None:
         counts = np.asarray(counts, np.int64)
-        if counts.shape[0] > self.port_traffic.shape[0]:
-            grown = np.zeros(counts.shape[0], np.int64)
-            grown[:self.port_traffic.shape[0]] = self.port_traffic
-            self.port_traffic = grown
+        self.port_traffic = self._grow_to(self.port_traffic, counts.shape[0])
         self.port_traffic[:counts.shape[0]] += counts
+
+    def _add_split_counts(self, local_counts, remote_counts) -> None:
+        n = max(local_counts.shape[0], remote_counts.shape[0])
+        self.local_port_traffic = self._grow_to(self.local_port_traffic, n)
+        self.remote_port_traffic = self._grow_to(self.remote_port_traffic, n)
+        self.local_port_traffic[:local_counts.shape[0]] += local_counts
+        self.remote_port_traffic[:remote_counts.shape[0]] += remote_counts
 
     def _gated(self, regs: CrossbarRegisters) -> CrossbarRegisters:
         """Register capacities clamped to the static slab depth, so every

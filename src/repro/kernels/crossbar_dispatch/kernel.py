@@ -130,6 +130,117 @@ def plan_call(dst: jax.Array, allowed_row: jax.Array, quota_row: jax.Array,
 
 
 # ======================================================================
+# 1b. plan_multi: all source regions in ONE sweep over token blocks
+# ======================================================================
+def _plan_multi_kernel(dst_ref, src_ref, allowed_ref, quota_ref,
+                       keep_ref, rank_ref, err_ref, granted_ref,
+                       live_scratch, *, n_ports: int, block_t: int):
+    """Fused multi-source grant sweep.
+
+    One grid pass over token blocks computes, for *every* (src, dst)
+    stream at once, the per-packet stream ranks and iso/quota verdicts —
+    replacing the n_ports separate ``plan`` launches (and their stacked
+    [n, T] intermediates) the backend used to sweep.  The [1, n^2] VMEM
+    scratch carries the per-pair live counts between blocks (the
+    arbiter's package counters, one per stream); the flattened register
+    matrices index by ``pair = src * n + dst``.  Capacity is *not*
+    checked here: global WRR slots (and the capacity cut) compose
+    outside from the granted-count matrix this kernel emits.
+    """
+    tb = pl.program_id(0)
+
+    @pl.when(tb == 0)
+    def _init():
+        live_scratch[...] = jnp.zeros_like(live_scratch)
+
+    n2 = n_ports * n_ports
+    dst = dst_ref[0]                                          # [bT] int32
+    src = src_ref[0]                                          # [bT] int32
+    allowed = allowed_ref[0]                                  # [n2] 0/1
+    quota = quota_ref[0]                                      # [n2] int32
+
+    valid = ((dst >= 0) & (dst < n_ports)
+             & (src >= 0) & (src < n_ports))                  # [bT]
+    pair = (jnp.clip(src, 0, n_ports - 1) * n_ports
+            + jnp.clip(dst, 0, n_ports - 1))
+    pair_oh = ((pair[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_t, n2), 1))
+        & valid[:, None]).astype(jnp.int32)                   # [bT, n2]
+    iso_ok = jnp.sum(pair_oh * allowed[None, :], axis=1) > 0  # [bT]
+
+    live = pair_oh * iso_ok[:, None].astype(jnp.int32)
+    ex_cum = jnp.cumsum(live, axis=0) - live                  # [bT, n2]
+    rank = (jnp.sum(pair_oh * ex_cum, axis=1)
+            + jnp.sum(pair_oh * live_scratch[0][None, :], axis=1))
+
+    quota_t = jnp.sum(pair_oh * quota[None, :], axis=1)
+    quota_ok = (quota_t == 0) | (rank < quota_t)
+    keep = iso_ok & quota_ok
+
+    err = jnp.where(~iso_ok, jnp.int32(ErrorCode.INVALID_DEST),
+           jnp.where(~quota_ok, jnp.int32(ErrorCode.GRANT_TIMEOUT),
+                     jnp.int32(ErrorCode.OK)))
+
+    keep_ref[0] = keep.astype(jnp.int32)
+    rank_ref[0] = jnp.where(iso_ok, rank, 0)
+    err_ref[0] = err
+
+    live_scratch[...] = live_scratch[...] + jnp.sum(live, axis=0)[None, :]
+    granted = jnp.sum(pair_oh * keep[:, None].astype(jnp.int32), axis=0)
+    granted_ref[...] = jnp.where(
+        tb == 0, granted[None, :], granted_ref[...] + granted[None, :])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_ports", "block_t", "interpret"))
+def plan_multi_call(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
+                    quota_sd: jax.Array, *, n_ports: int,
+                    block_t: int = 256, interpret: bool = False):
+    """dst/src: [T] int32 (padded; pad rows carry dst = -1 → isolation drop).
+
+    ``allowed_sd`` / ``quota_sd``: [S, S] int32 register matrices indexed
+    [src, dst] (reset gating pre-folded into ``allowed_sd``).  Returns
+    (keep [T] i32 — iso+quota verdict, rank [T] i32 — per-stream rank,
+    err [T] i32 — pre-capacity error code, granted [S, S] i32 — per-pair
+    iso+quota-passing counts).
+    """
+    T = dst.shape[0]
+    nb = T // block_t
+    n2 = n_ports * n_ports
+    kernel = functools.partial(_plan_multi_kernel, n_ports=n_ports,
+                               block_t=block_t)
+    keep, rank, err, granted = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, n2), lambda i: (0, 0)),
+            pl.BlockSpec((1, n2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, n2), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block_t), jnp.int32),
+            jax.ShapeDtypeStruct((nb, block_t), jnp.int32),
+            jax.ShapeDtypeStruct((nb, block_t), jnp.int32),
+            jax.ShapeDtypeStruct((1, n2), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n2), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(dst.reshape(nb, block_t), src.reshape(nb, block_t),
+      allowed_sd.reshape(1, n2), quota_sd.reshape(1, n2))
+    return (keep.reshape(T), rank.reshape(T), err.reshape(T),
+            granted.reshape(n_ports, n_ports))
+
+
+# ======================================================================
 # 2. scatter: granted packets -> per-destination slabs (MXU)
 # ======================================================================
 def _scatter_kernel(x_ref, dst_ref, keep_ref, slot_ref, slab_ref, *,

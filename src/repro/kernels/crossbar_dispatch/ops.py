@@ -69,6 +69,43 @@ def _plan(dst: jax.Array, allowed_row: jax.Array,
     return keep[:T], slot[:T], err[:T], counts
 
 
+def _plan_multi(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
+                quota_sd: jax.Array, *, block_t: int = 256,
+                interpret: bool | None = None):
+    """Fused grant decisions for ALL source regions' packets in one launch.
+
+    dst/src [T] int32; ``allowed_sd``/``quota_sd`` [S, S] register matrices
+    indexed [src, dst] (fold reset gating into ``allowed_sd`` first).
+    Returns (keep, rank, err, granted[S, S]) — iso+quota verdicts and
+    per-stream ranks, capacity *not* applied (compose global WRR slots from
+    ``granted`` and cut at capacity outside; see ``PallasBackend.plan``).
+
+    Off-TPU (``interpret=None`` resolving to a non-TPU backend) the same
+    blockwise sweep runs as its compiled ``lax.scan`` reference
+    (``ref.plan_multi_ref`` — bit-identical outputs) instead of paying the
+    pallas interpreter's per-op emulation; pass ``interpret=True``
+    explicitly to force the kernel through the interpreter (the
+    kernel-vs-ref test sweeps do).
+    """
+    n_ports = allowed_sd.shape[0]
+    if dst.shape[0] == 0:       # zero-packet round: nothing granted
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z, z, jnp.zeros((n_ports, n_ports), jnp.int32)
+    block_t = min(block_t, max(8, dst.shape[0]))
+    dstp, T = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
+    srcp, _ = _pad_tokens(src.astype(jnp.int32), block_t, 0)
+    if interpret is None and _should_interpret():
+        from repro.kernels.crossbar_dispatch.ref import plan_multi_ref
+        keep, rank, err, granted = plan_multi_ref(
+            dstp, srcp, allowed_sd, quota_sd, block_t)
+    else:
+        keep, rank, err, granted = _k.plan_multi_call(
+            dstp, srcp, allowed_sd.astype(jnp.int32),
+            quota_sd.astype(jnp.int32), n_ports=n_ports, block_t=block_t,
+            interpret=bool(interpret))
+    return keep[:T], rank[:T], err[:T], granted
+
+
 def _dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
               slot: jax.Array, *, n_ports: int, capacity: int,
               block_t: int = 256,

@@ -40,6 +40,74 @@ def plan_ref(dst: jax.Array, allowed_row: jax.Array, quota_row: jax.Array,
     return (keep.astype(jnp.int32), jnp.where(keep, rank, 0), err, counts)
 
 
+def plan_multi_ref(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
+                   quota_sd: jax.Array, block_t: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Blockwise reference of the fused multi-source plan kernel.
+
+    The *same* sweep the ``plan_multi`` Pallas kernel runs — token blocks
+    in sequence, a [n^2] live-count carry standing in for the VMEM
+    scratch — expressed as a ``lax.scan`` so XLA compiles it directly.
+    Bit-identical outputs to ``plan_multi_call`` (pinned in
+    ``tests/test_fabric.py``); this is also the off-TPU production path,
+    where the kernel would only run under the pallas interpreter.
+
+    ``dst``/``src`` must be pre-padded to a multiple of ``block_t``
+    (pad rows carry ``dst = -1``).  Returns (keep, rank, err,
+    granted [S, S]) with capacity *not* applied, like the kernel.
+    """
+    n = allowed_sd.shape[0]
+    n2 = n * n
+    T = dst.shape[0]
+    # Chunking is free to differ from the kernel's: the carry makes the
+    # sweep chunk-invariant (integer cumsum composes exactly), so small
+    # batches run as ONE chunk — no scan loop — and only genuinely long
+    # ones fall back to block_t-sized steps to bound the [bT, n^2] live
+    # mask.
+    if T <= 4096:
+        block_t = T
+    nb = T // block_t
+    allowed_flat = allowed_sd.astype(jnp.int32).reshape(n2)
+    quota_flat = quota_sd.astype(jnp.int32).reshape(n2)
+    lanes = jnp.arange(n2, dtype=jnp.int32)
+
+    def step(live_carry, blk):
+        # Same math as the kernel's block body; register lookups are row
+        # gathers here (the kernel one-hot-reduces them instead — both are
+        # exact integer selects, so outputs stay bit-identical).
+        d, s = blk
+        valid = (d >= 0) & (d < n) & (s >= 0) & (s < n)
+        pair = jnp.clip(s, 0, n - 1) * n + jnp.clip(d, 0, n - 1)
+        iso_ok = valid & (allowed_flat[pair] > 0)
+        live = ((pair[:, None] == lanes[None, :])
+                & iso_ok[:, None]).astype(jnp.int32)          # [bT, n2]
+        ex_cum = jnp.cumsum(live, axis=0) - live
+        rank = (jnp.take_along_axis(ex_cum, pair[:, None], axis=1)[:, 0]
+                + live_carry[pair])
+        quota_t = quota_flat[pair]
+        quota_ok = (quota_t == 0) | (rank < quota_t)
+        keep = iso_ok & quota_ok
+        err = jnp.where(~iso_ok, jnp.int32(ErrorCode.INVALID_DEST),
+               jnp.where(~quota_ok, jnp.int32(ErrorCode.GRANT_TIMEOUT),
+                         jnp.int32(ErrorCode.OK)))
+        granted = jnp.zeros((n2,), jnp.int32).at[pair].add(
+            keep.astype(jnp.int32))
+        return live_carry + jnp.sum(live, axis=0), (
+            keep.astype(jnp.int32), jnp.where(iso_ok, rank, 0), err, granted)
+
+    zero_carry = jnp.zeros((n2,), jnp.int32)
+    if nb == 1:                 # no loop machinery for a single chunk
+        _, (keep, rank, err, granted) = step(
+            zero_carry, (dst.astype(jnp.int32), src.astype(jnp.int32)))
+        return keep, rank, err, granted.reshape(n, n)
+    _, (keep, rank, err, granted) = jax.lax.scan(
+        step, zero_carry,
+        (dst.astype(jnp.int32).reshape(nb, block_t),
+         src.astype(jnp.int32).reshape(nb, block_t)))
+    return (keep.reshape(T), rank.reshape(T), err.reshape(T),
+            jnp.sum(granted, axis=0).reshape(n, n))
+
+
 def scatter_ref(x: jax.Array, dst: jax.Array, keep: jax.Array,
                 slot: jax.Array, n_ports: int, capacity: int) -> jax.Array:
     T, D = x.shape

@@ -189,15 +189,27 @@ class TrafficAwareDefrag:
     traffic stays on its source shards, moving modules buys no interconnect
     locality, so a non-zero gate keeps the defragger quiet until remote
     bytes actually flow.  0.0 (default) disables the gate.
+
+    ``rank_by`` picks the move ordering: ``"cold"`` (default) migrates the
+    least-trafficked modules first (cheapest disruption); ``"ici"`` ranks
+    candidate ``Migrate`` moves by this window's *cross-axis* grants into
+    their port (``Signals.region_remote_delta`` — the per-port remote/local
+    split the sharded fabric accounts), so the moves with the largest ICI
+    savings land inside the ``max_moves`` budget first.  When no per-port
+    split was reported this window, ``"ici"`` falls back to cold-first.
     """
 
     name = "traffic_defrag"
 
     def __init__(self, *, max_moves: int = 1, threshold: float = 0.0,
-                 min_remote_fraction: float = 0.0):
+                 min_remote_fraction: float = 0.0, rank_by: str = "cold"):
+        if rank_by not in ("cold", "ici"):
+            raise ValueError(
+                f"rank_by must be 'cold' or 'ici', got {rank_by!r}")
         self.max_moves = max_moves
         self.threshold = threshold
         self.min_remote_fraction = min_remote_fraction
+        self.rank_by = rank_by
 
     @staticmethod
     def coldest_regions(signals: Signals, state: PoolState, tenant: str,
@@ -226,7 +238,14 @@ class TrafficAwareDefrag:
                     continue
                 candidates.append((signals.region_traffic_delta(p), p,
                                    t.name, i))
-        candidates.sort(key=lambda c: (c[0], -c[1], c[2]))
+        if (self.rank_by == "ici"
+                and any(signals.remote_port_traffic_delta)):
+            # Largest ICI savings first; cold-first breaks ties so the
+            # ordering degrades gracefully to the default.
+            candidates.sort(key=lambda c: (
+                -signals.region_remote_delta(c[1]), c[0], -c[1], c[2]))
+        else:
+            candidates.sort(key=lambda c: (c[0], -c[1], c[2]))
         events: List[ev.Event] = []
         for _, src, name, i in candidates:
             if len(events) >= self.max_moves:

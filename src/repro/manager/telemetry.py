@@ -23,6 +23,10 @@ channel                 value
 ``granted_packets``     cumulative packets granted (int)
 ``remote_packets``      cumulative grants that crossed the mesh axis (int)
 ``local_packets``       cumulative grants on the source's own shard (int)
+``remote_port_traffic`` cumulative cross-axis grants per destination port
+                        (int sequence — ranks ports by ICI cost)
+``local_port_traffic``  cumulative same-shard grants per destination port
+                        (int sequence)
 ``straggler_score``     ``{region: EWMA / fleet median}``
 ``fabric_traces``       cumulative XLA retrace count (int)
 ======================  ================================================
@@ -111,6 +115,12 @@ class Signals:
     local_traffic: int = 0
     remote_traffic_delta: int = 0
     local_traffic_delta: int = 0
+    # ... and the same split per destination port, so policies can rank
+    # individual Migrate moves by the ICI traffic they would relocate
+    remote_port_traffic: Tuple[int, ...] = ()
+    local_port_traffic: Tuple[int, ...] = ()
+    remote_port_traffic_delta: Tuple[int, ...] = ()
+    local_port_traffic_delta: Tuple[int, ...] = ()
     # fault-tolerance
     straggler_score: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
@@ -130,6 +140,15 @@ class Signals:
         port = rid + 1
         if port < len(self.port_traffic_delta):
             return int(self.port_traffic_delta[port])
+        return 0
+
+    def region_remote_delta(self, rid: int) -> int:
+        """This window's *cross-axis* grants into a region's port (0 if no
+        sharded fabric reported a per-port split) — the ICI bytes a
+        ``Migrate`` relocating that region's module would move with it."""
+        port = rid + 1
+        if port < len(self.remote_port_traffic_delta):
+            return int(self.remote_port_traffic_delta[port])
         return 0
 
     @property
@@ -235,6 +254,10 @@ class FabricProbe:
         if f.remote_packets or f.local_packets:
             ch["remote_packets"] = int(f.remote_packets)
             ch["local_packets"] = int(f.local_packets)
+            ch["remote_port_traffic"] = tuple(
+                int(v) for v in f.remote_port_traffic)
+            ch["local_port_traffic"] = tuple(
+                int(v) for v in f.local_port_traffic)
         return ch
 
 
@@ -298,10 +321,18 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
             admission_wait=float(admission.get(t.app_id, 0.0)))
         for t in sorted(state.tenants, key=lambda t: t.name))
 
+    def vec_delta(cur, prev_vec):
+        return tuple(v - (prev_vec[i] if i < len(prev_vec) else 0)
+                     for i, v in enumerate(cur))
+
     traffic = tuple(int(v) for v in ch.get("port_traffic", ()))
-    prev_traffic = prev.port_traffic if prev is not None else ()
-    delta = tuple(v - (prev_traffic[i] if i < len(prev_traffic) else 0)
-                  for i, v in enumerate(traffic))
+    delta = vec_delta(traffic, prev.port_traffic if prev is not None else ())
+    remote_ports = tuple(int(v) for v in ch.get("remote_port_traffic", ()))
+    local_ports = tuple(int(v) for v in ch.get("local_port_traffic", ()))
+    remote_ports_delta = vec_delta(
+        remote_ports, prev.remote_port_traffic if prev is not None else ())
+    local_ports_delta = vec_delta(
+        local_ports, prev.local_port_traffic if prev is not None else ())
     offered = int(ch.get("offered_packets", 0))
     granted = int(ch.get("granted_packets", 0))
     d_off = offered - (prev.offered_packets if prev is not None else 0)
@@ -325,4 +356,7 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
         fabric_traces=int(ch.get("fabric_traces", 0)),
         remote_traffic=remote, local_traffic=local,
         remote_traffic_delta=d_remote, local_traffic_delta=d_local,
+        remote_port_traffic=remote_ports, local_port_traffic=local_ports,
+        remote_port_traffic_delta=remote_ports_delta,
+        local_port_traffic_delta=local_ports_delta,
         straggler_score=dict(ch.get("straggler_score", {})))

@@ -424,8 +424,11 @@ def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
     ``counts`` (global per-expert grant histogram) and
     ``remote_packets`` / ``local_packets`` — packets that crossed the
     mesh axis vs. stayed on their source shard (the §IV-E crossbar hops
-    that cost ICI bandwidth; ``Fabric.account_stats`` folds them into
-    manager telemetry).
+    that cost ICI bandwidth) — plus their per-*port* splits
+    ``remote_counts`` / ``local_counts`` ([E] vectors), so the manager can
+    rank individual ports (and the Migrate moves that would relocate
+    them) by ICI savings.  ``Fabric.account_stats`` folds all of them
+    into manager telemetry.
     """
     from repro.core.registers import CrossbarRegisters, ErrorCode
 
@@ -457,9 +460,11 @@ def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
     y = y.reshape(T_loc, k, d).sum(axis=1).reshape(B_loc, S, d)
 
     me = jax.lax.axis_index(axis_name)
-    local = jax.lax.psum(
-        jnp.sum((plan.keep & (dst // E_loc == me)).astype(jnp.int32)),
-        axis_name)
+    local_counts = jax.lax.psum(
+        jnp.zeros((E,), jnp.int32).at[jnp.clip(dst, 0, E - 1)].add(
+            (plan.keep & (dst // E_loc == me)).astype(jnp.int32)),
+        axis_name)                                         # [E] per-port
+    local = jnp.sum(local_counts)
     offered = jnp.asarray(T_loc * k * n_shards, jnp.int32)
     granted = jnp.sum(plan.counts)
     frac_tokens = (plan.counts / (T_loc * n_shards * k)).astype(jnp.float32)
@@ -476,6 +481,8 @@ def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
         "granted_packets": granted,
         "local_packets": local,
         "remote_packets": granted - local,
+        "local_counts": local_counts,
+        "remote_counts": plan.counts - local_counts,
     }
     return y, stats
 
@@ -522,7 +529,9 @@ def moe_apply_sharded_reference(params, x: jax.Array, moe: MoEConfig,
                               weights=w, registers=registers)
     y = y.reshape(T, k, d).sum(axis=1).reshape(B, S, d)
 
-    local = jnp.sum((plan.keep & (dst // E_loc == src)).astype(jnp.int32))
+    local_counts = jnp.zeros((E,), jnp.int32).at[jnp.clip(dst, 0, E - 1)].add(
+        (plan.keep & (dst // E_loc == src)).astype(jnp.int32))
+    local = jnp.sum(local_counts)
     offered = jnp.asarray(T * k, jnp.int32)
     granted = jnp.sum(plan.counts)
     frac_tokens = (plan.counts / (T * k)).astype(jnp.float32)
@@ -537,6 +546,8 @@ def moe_apply_sharded_reference(params, x: jax.Array, moe: MoEConfig,
         "granted_packets": granted,
         "local_packets": local,
         "remote_packets": granted - local,
+        "local_counts": local_counts,
+        "remote_counts": plan.counts - local_counts,
     }
     return y, stats
 

@@ -38,12 +38,14 @@ def make_shell(n=4, hbm=16 * GB, **kw):
 
 
 def sig(tick=0, tenants=(), free=1, healthy=4, total=4, frag=0.0,
-        traffic_delta=()):
+        traffic_delta=(), remote_delta=(), local_delta=()):
     """Hand-built Signals for direct policy tests."""
     return Signals(tick=tick, epoch=0, tenants=tuple(tenants),
                    free_regions=free, healthy_regions=healthy,
                    total_regions=total, fragmentation=frag,
-                   port_traffic_delta=tuple(traffic_delta))
+                   port_traffic_delta=tuple(traffic_delta),
+                   remote_port_traffic_delta=tuple(remote_delta),
+                   local_port_traffic_delta=tuple(local_delta))
 
 
 def ten(name, app_id=0, requested=2, granted=1, queue=0, active=0):
@@ -257,6 +259,53 @@ class TestTelemetry:
         assert s.offered_packets == 8
         assert s.port_traffic == (2, 3, 4)
 
+    def test_per_port_remote_local_split_flows_to_signals(self):
+        """account(src_shard=...) -> FabricProbe -> Signals, with deltas
+        and the region_remote_delta helper."""
+        import jax.numpy as jnp
+
+        from repro.core.registers import CrossbarRegisters
+        from repro.fabric import Fabric
+
+        shell = make_shell()
+        regs = CrossbarRegisters.create(4, capacity=8)
+        fabric = Fabric(regs, backend="reference", capacity=8)
+        dst = jnp.asarray([0, 1, 2, 2], jnp.int32)
+        src = jnp.zeros((4,), jnp.int32)
+        plan = fabric.plan(dst, src)
+        # 2 shards of 2 ports: src shard 0 owns ports 0-1.
+        fabric.account(plan, src_shard=0, n_shards=2)
+        assert list(fabric.local_port_traffic) == [1, 1, 0, 0]
+        assert list(fabric.remote_port_traffic) == [0, 0, 2, 0]
+
+        s1 = assemble_signals(shell, [fabric.probe()], tick=0)
+        assert s1.remote_port_traffic == (0, 0, 2, 0)
+        assert s1.local_port_traffic == (1, 1, 0, 0)
+        assert s1.remote_port_traffic_delta == (0, 0, 2, 0)
+        assert s1.region_remote_delta(1) == 2      # rid 1 -> port 2
+        fabric.account(plan, src_shard=1, n_shards=2)
+        s2 = assemble_signals(shell, [fabric.probe()], tick=1, prev=s1)
+        assert s2.remote_port_traffic == (1, 1, 2, 0)   # cumulative
+        assert s2.remote_port_traffic_delta == (1, 1, 0, 0)
+        assert s2.local_port_traffic_delta == (0, 0, 2, 0)
+
+    def test_account_stats_folds_per_port_split(self):
+        from repro.core.registers import CrossbarRegisters
+        from repro.fabric import Fabric
+
+        regs = CrossbarRegisters.create(4, capacity=8)
+        fabric = Fabric(regs, backend="reference", capacity=8)
+        fabric.account_stats({"counts": [3, 1, 0, 0],
+                              "offered_packets": 4, "granted_packets": 4,
+                              "remote_packets": 3, "local_packets": 1,
+                              "remote_counts": [2, 1, 0, 0],
+                              "local_counts": [1, 0, 0, 0]})
+        assert list(fabric.remote_port_traffic) == [2, 1, 0, 0]
+        assert list(fabric.local_port_traffic) == [1, 0, 0, 0]
+        ch = fabric.probe().sample()
+        assert ch["remote_port_traffic"] == (2, 1, 0, 0)
+        assert ch["local_port_traffic"] == (1, 0, 0, 0)
+
 
 # ----------------------------------------------------------------------
 # policies
@@ -412,6 +461,39 @@ class TestTrafficAwareDefrag:
             == (1, 0)
         assert TrafficAwareDefrag.coldest_regions(s, shell.state, "nope",
                                                   1) == ()
+
+    def test_ici_ranking_moves_hottest_remote_port_first(self):
+        """rank_by="ici": the move relocating the most cross-axis traffic
+        lands inside the max_moves budget first, even when cold-first
+        would have picked the other module."""
+        shell = make_shell(n=4)
+        shell.submit("pad", [fp(), fp()])          # rids 0,1
+        shell.submit("a", [fp(), fp()])            # rids 2,3
+        shell.release("pad")                       # 0,1 free; a fragmented
+        # rid 2 (port 3) carries the remote traffic; rid 3 (port 4) is the
+        # cold one overall.
+        s = sig(frag=1.0, traffic_delta=(0, 0, 0, 9, 1),
+                remote_delta=(0, 0, 0, 8, 0), local_delta=(0, 0, 0, 1, 1))
+        cold = TrafficAwareDefrag(max_moves=1)
+        assert cold.decide(s, shell.state) == [
+            Migrate(tenant="a", module_idx=1, dst=0)]
+        ici = TrafficAwareDefrag(max_moves=1, rank_by="ici")
+        assert ici.decide(s, shell.state) == [
+            Migrate(tenant="a", module_idx=0, dst=0)]
+
+    def test_ici_ranking_falls_back_to_cold_without_split(self):
+        shell = make_shell(n=4)
+        shell.submit("pad", [fp(), fp()])
+        shell.submit("a", [fp(), fp()])
+        shell.release("pad")
+        s = sig(frag=1.0, traffic_delta=(0, 0, 0, 9, 0))
+        ici = TrafficAwareDefrag(max_moves=1, rank_by="ici")
+        assert ici.decide(s, shell.state) == [
+            Migrate(tenant="a", module_idx=1, dst=0)]
+
+    def test_rank_by_validated(self):
+        with pytest.raises(ValueError):
+            TrafficAwareDefrag(rank_by="hot")
 
 
 class TestFairShare:
