@@ -59,6 +59,30 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
                 "plan_equal_reference": bool(
                     np.array_equal(counts, base_plan)),
             })
+        # Debug-off guard row: `debug` is resolved to a trace-time constant
+        # at Fabric construction, so an explicit debug=False fabric must run
+        # the *same* compiled transfer as a plain one — the sanitizer layer
+        # (docs/invariants.md) is free when off.  check_bench_regression.py
+        # gates overhead_ratio within this file, so the check is
+        # machine-neutral.
+        plain = Fabric(regs, backend="reference", capacity=CAPACITY)
+        off = Fabric(regs, backend="reference", capacity=CAPACITY,
+                     debug=False)
+        plain_us = time_us(
+            lambda xx, d, s, f=plain: f.transfer(xx, d, s)[0], x, dst, src)
+        off_us = time_us(
+            lambda xx, d, s, f=off: f.transfer(xx, d, s)[0], x, dst, src)
+        y_plain = plain.transfer(x, dst, src)[0]
+        y_off = off.transfer(x, dst, src)[0]
+        rows.append({
+            "backend": "debug_off_guard", "T": T, "n_ports": n_ports,
+            "D": D,
+            "transfer_us": round(off_us, 1),
+            "plain_transfer_us": round(plain_us, 1),
+            "overhead_ratio": round(off_us / plain_us, 3),
+            "bit_identical_to_plain": bool(
+                np.array_equal(np.asarray(y_plain), np.asarray(y_off))),
+        })
     claims = {
         "note": ("CPU wall time (pallas in interpret mode); the trajectory "
                  "tracks relative backend cost, TPU perf is the roofline's "
@@ -67,5 +91,9 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
         "device_count": str(jax.device_count()),
         "sharded": "see BENCH_moe.json (forced multi-device subprocess)"
         if jax.device_count() < 2 else "see rows",
+        "debug_off_guard": ("explicit debug=False vs plain Fabric on the "
+                            "reference backend; overhead_ratio ~1.0 and "
+                            "bit-identical outputs prove the checkify "
+                            "sanitizer costs nothing when off"),
     }
     return rows, claims

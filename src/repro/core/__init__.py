@@ -12,7 +12,7 @@ from repro.core.registers import CrossbarRegisters, ErrorCode, validate_register
 from repro.core.arbiter import (DispatchPlan, wrr_dispatch_plan, wrr_slots,
                                 dispatch, combine, dispatch_dense,
                                 combine_dense, flat_slot_addr)
-from repro.core.crossbar import (
+from repro.core.crossbar import (  # fablint: disable=FAB003 (back-compat re-export)
     CrossbarInterconnect, exchange_local, combine_local,
     exchange_sharded, combine_sharded, pairwise_dispatch_plan,
 )

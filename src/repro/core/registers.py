@@ -94,26 +94,30 @@ class CrossbarRegisters:
         d, a, r = self.dest, self.allowed, self.reset
         if dest:
             idx, vals = zip(*dest)
-            d = d.at[jnp.asarray(idx)].set(jnp.asarray(vals, d.dtype))
+            d = d.at[jnp.asarray(idx)].set(jnp.asarray(vals, d.dtype),
+                                           mode="drop")
         if allowed:
             src, dst, vals = zip(*allowed)
             a = a.at[jnp.asarray(src), jnp.asarray(dst)].set(
-                jnp.asarray(vals, a.dtype))
+                jnp.asarray(vals, a.dtype), mode="drop")
         if reset:
             idx, vals = zip(*reset)
-            r = r.at[jnp.asarray(idx)].set(jnp.asarray(vals, r.dtype))
+            r = r.at[jnp.asarray(idx)].set(jnp.asarray(vals, r.dtype),
+                                           mode="drop")
         return self.write(dest=d, allowed=a, reset=r)
 
     def with_isolation(self, src: int, allowed_dsts) -> "CrossbarRegisters":
         mask = self.allowed.at[src].set(
-            jnp.zeros((self.n_ports,), bool).at[jnp.asarray(allowed_dsts)].set(True))
+            jnp.zeros((self.n_ports,), bool).at[jnp.asarray(allowed_dsts)].set(
+                True, mode="drop"), mode="drop")
         return self.write(allowed=mask)
 
     def with_quota(self, dst: int, src: int, packages: int) -> "CrossbarRegisters":
-        return self.write(quota=self.quota.at[dst, src].set(packages))
+        return self.write(quota=self.quota.at[dst, src].set(packages,
+                                                            mode="drop"))
 
     def with_dest(self, module: int, dst: int) -> "CrossbarRegisters":
-        return self.write(dest=self.dest.at[module].set(dst))
+        return self.write(dest=self.dest.at[module].set(dst, mode="drop"))
 
 
 def validate_registers(regs: CrossbarRegisters) -> None:

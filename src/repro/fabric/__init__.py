@@ -22,10 +22,11 @@ from repro.fabric.backends import (PallasBackend,               # noqa: F401
                                    ReferenceBackend, ShardedBackend,
                                    backend_names, get_backend,
                                    register_fabric_backend)
-from repro.fabric.fabric import Fabric, fabric_for_shell        # noqa: F401
+from repro.fabric.fabric import (DEBUG_ENV_VAR, Fabric,         # noqa: F401
+                                 fabric_for_shell)
 
 __all__ = [
-    "Fabric", "fabric_for_shell", "DispatchPlan",
+    "Fabric", "fabric_for_shell", "DispatchPlan", "DEBUG_ENV_VAR",
     "ReferenceBackend", "PallasBackend", "ShardedBackend",
     "get_backend", "register_fabric_backend", "backend_names",
 ]

@@ -162,8 +162,8 @@ class PallasBackend:
                           jnp.where(cap_ok, jnp.int32(ErrorCode.OK),
                                     jnp.int32(ErrorCode.ACK_TIMEOUT)))
         counts = jnp.zeros((n,), jnp.int32).at[dstc].add(
-            keep.astype(jnp.int32))
-        drops = jnp.zeros((4,), jnp.int32).at[error].add(1)
+            keep.astype(jnp.int32), mode="drop")
+        drops = jnp.zeros((4,), jnp.int32).at[error].add(1, mode="drop")
         return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0),
                             dst=dst, error=error, counts=counts, drops=drops)
 
@@ -215,6 +215,14 @@ class ShardedBackend:
     def __init__(self, axis_name: str):
         self.axis_name = axis_name
 
+    def effective_src(self, src: jax.Array) -> jax.Array:
+        """The source port this backend actually plans with — its mesh
+        axis index, not the caller's ``src`` vector (which it ignores).
+        The checkify sanitizer asks for this so its isolation re-check
+        matches the plan's own arbitration inputs."""
+        return jnp.full_like(src.astype(jnp.int32),
+                             jax.lax.axis_index(self.axis_name))
+
     def ports_per_shard(self, regs: CrossbarRegisters) -> int:
         """Slave ports each shard owns; ``n_ports`` must divide evenly."""
         n_src = _axis_size(self.axis_name)
@@ -243,7 +251,7 @@ class ShardedBackend:
 
         # Global WRR slots from the all-gathered per-source granted counts.
         mine = jnp.zeros((n_dst,), jnp.int32).at[dstc].add(
-            keep_pre.astype(jnp.int32))
+            keep_pre.astype(jnp.int32), mode="drop")
         granted = jax.lax.all_gather(mine, ax)               # [src, dst]
         slot = wrr_slots(rank, granted, dstc, me)
         cap_ok = slot < regs.capacity[dstc]
@@ -255,10 +263,10 @@ class ShardedBackend:
                                 jnp.int32(ErrorCode.ACK_TIMEOUT))))
         counts = jax.lax.psum(
             jnp.zeros((n_dst,), jnp.int32).at[dstc].add(
-                keep.astype(jnp.int32)),
+                keep.astype(jnp.int32), mode="drop"),
             ax)
         drops = jax.lax.psum(
-            jnp.zeros((4,), jnp.int32).at[error].add(1), ax)
+            jnp.zeros((4,), jnp.int32).at[error].add(1, mode="drop"), ax)
         return DispatchPlan(keep=keep, slot=jnp.where(keep, slot, 0),
                             dst=dst, error=error, counts=counts, drops=drops)
 
@@ -276,7 +284,8 @@ class ShardedBackend:
         pps = self.ports_per_shard(regs)
         D = x.shape[-1]
         addr = arbiter.flat_slot_addr(plan, n_dst, capacity)
-        send = jnp.zeros((n_dst * capacity + 1, D), x.dtype).at[addr].add(x)
+        send = jnp.zeros((n_dst * capacity + 1, D),
+                         x.dtype).at[addr].add(x)  # fablint: trash-row
         send = send[:n_dst * capacity].reshape(n_src, pps, capacity, D)
         recv = jax.lax.all_to_all(send, self.axis_name, split_axis=0,
                                   concat_axis=0, tiled=False)
@@ -319,18 +328,22 @@ class ShardedBackend:
         # (lane W is the trash slot for drops; -1 marks empty rows).
         lane = dshard * (W + 1) + jnp.where(keep, jnp.minimum(pos, W), W)
         addr_send = jnp.full((n_src * (W + 1),), -1, jnp.int32).at[lane].set(
-            jnp.where(keep, local_addr, -1))
+            jnp.where(keep, local_addr, -1))  # fablint: trash-row (lane W)
         addr_send = addr_send.reshape(n_src, W + 1)[:, :W]
         addr_recv = jax.lax.all_to_all(addr_send, ax, split_axis=0,
                                        concat_axis=0, tiled=False)
-        rows = jnp.take(y.reshape(pps * C, D),
-                        jnp.clip(addr_recv, 0, pps * C - 1), axis=0)
+        # mode="clip" IS the old jnp.clip(addr_recv, 0, pps*C-1): -1 marks
+        # an empty lane row and clips to row 0, which the mask below zeros.
+        rows = jnp.take(y.reshape(pps * C, D), addr_recv, axis=0,
+                        mode="clip")
         rows = rows * (addr_recv >= 0).astype(y.dtype)[..., None]
         back = jax.lax.all_to_all(rows, ax, split_axis=0,
                                   concat_axis=0, tiled=False)
         flat = back.reshape(n_src * W, D)
-        out = jnp.take(flat, jnp.clip(dshard * W + jnp.minimum(pos, W - 1),
-                                      0, n_src * W - 1), axis=0)
+        # In-range by construction (dshard < n_src, min(pos, W-1) < W);
+        # dropped packets read a garbage row that `keep` zeros right after.
+        out = jnp.take(flat, dshard * W + jnp.minimum(pos, W - 1), axis=0,
+                       mode="clip")
         return out * (keep.astype(y.dtype) * weights)[:, None]
 
 

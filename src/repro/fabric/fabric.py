@@ -28,17 +28,54 @@ selected at construction; see ``repro.fabric.backends``.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from typing import Any, Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify
 
 from repro.core.arbiter import DispatchPlan
 from repro.core.registers import CrossbarRegisters
+from repro.fabric import sanitize
 from repro.fabric.backends import get_backend
 
 ApplyFn = Callable[[jax.Array], jax.Array]
+
+#: env hook: ``REPRO_FABRIC_DEBUG=1`` (or ``sanitize``/``strict``) turns the
+#: checkify sanitizer on for every fabric constructed without an explicit
+#: ``debug=`` — see :mod:`repro.fabric.sanitize` and docs/invariants.md.
+DEBUG_ENV_VAR = "REPRO_FABRIC_DEBUG"
+
+
+def _resolve_debug(debug) -> Union[bool, str]:
+    """Normalize the ``debug`` constructor argument (or, when it is None,
+    the ``REPRO_FABRIC_DEBUG`` environment variable) to one of
+    ``False | "sanitize" | "strict"``."""
+    if debug is None:
+        env = os.environ.get(DEBUG_ENV_VAR, "").strip().lower()
+        if env in ("1", "true", "on", "sanitize"):
+            return "sanitize"
+        if env == "strict":
+            return "strict"
+        return False
+    if debug is True:
+        return "strict"
+    if debug in (False, "off", "none", ""):
+        return False
+    if debug in sanitize.LEVELS:
+        return debug
+    raise ValueError(
+        f"debug must be True/False, 'sanitize' or 'strict'; got {debug!r}")
+
+
+def _in_trace(*vals) -> bool:
+    """True when any array leaf is a tracer — i.e. the caller sits inside
+    an outer jit/vmap/shard_map trace rather than at the host level."""
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(vals))
 
 
 class Fabric:
@@ -59,10 +96,26 @@ class Fabric:
         use ``min(registers.capacity, capacity)`` so register values stay
         the dynamic bandwidth knob while shapes stay compiled.  Defaults
         to the bound register file's max capacity at construction.
+    debug:
+        The checkify sanitizer (``repro.fabric.sanitize``).  ``False``
+        (checks compile to nothing — the default), ``"sanitize"``
+        (structural invariants that only a data-plane bug can fire),
+        ``"strict"``/``True`` (sanitize + raise on masked faults: invalid
+        destinations, over-capacity ACK_TIMEOUT bursts).  ``None`` reads
+        ``REPRO_FABRIC_DEBUG`` (``1``/``sanitize``/``strict``).
+
+        Host-level calls raise ``checkify.JaxRuntimeError`` directly.
+        Calls already inside a trace keep their checks only when ``debug``
+        was passed *explicitly* — the caller must then functionalize them
+        (``checkify.checkify`` around its outer jit; ``shard_map`` bodies
+        additionally need ``check_rep=False``).  Env-sourced debug skips
+        in-trace checks so exporting the variable cannot break programs
+        that never opted in.
     """
 
     def __init__(self, registers, *, backend: Union[str, Any] = "reference",
-                 capacity: Optional[int] = None, **backend_kw):
+                 capacity: Optional[int] = None,
+                 debug: Optional[Union[bool, str]] = None, **backend_kw):
         if isinstance(registers, CrossbarRegisters):
             regs0 = registers
             self._regs_fn = lambda: regs0
@@ -92,11 +145,35 @@ class Fabric:
         self.local_port_traffic = np.zeros(self.registers.n_ports, np.int64)
         self._trace_counts = {"plan": 0, "dispatch": 0, "combine": 0,
                               "transfer": 0}
+        self._debug_explicit = debug is not None
+        self.debug = _resolve_debug(debug)
         self._jit_plan = jax.jit(self._plan_impl)
         self._jit_dispatch = jax.jit(self._dispatch_impl)
         self._jit_combine = jax.jit(self._combine_impl)
         self._jit_transfer = jax.jit(self._transfer_impl,
                                      static_argnames=("apply_fn",))
+        if self.debug:
+            dbg = dict(debug=self.debug)
+            # In-trace entry points with bare checks: the enclosing program
+            # functionalizes them (checkify.checkify around its outer jit).
+            self._jit_plan_dbg = jax.jit(
+                functools.partial(self._plan_impl, **dbg))
+            self._jit_dispatch_dbg = jax.jit(
+                functools.partial(self._dispatch_impl, **dbg))
+            self._jit_combine_dbg = jax.jit(
+                functools.partial(self._combine_impl, **dbg))
+            self._jit_transfer_dbg = jax.jit(
+                functools.partial(self._transfer_impl, **dbg),
+                static_argnames=("apply_fn",))
+            # Host-level entry points: jit OUTERMOST so each (shape) traces
+            # once and returns a concrete error to throw.
+            self._chk_plan = jax.jit(checkify.checkify(
+                functools.partial(self._plan_impl, **dbg)))
+            self._chk_dispatch = jax.jit(checkify.checkify(
+                functools.partial(self._dispatch_impl, **dbg)))
+            self._chk_combine = jax.jit(checkify.checkify(
+                functools.partial(self._combine_impl, **dbg)))
+            self._chk_transfer_cache = {}
 
     # ---- live views ---------------------------------------------------
     @property
@@ -211,26 +288,62 @@ class Fabric:
                                        jnp.int32(self.capacity)))
 
     # ---- jitted impls (register values are traced arguments) ----------
-    def _plan_impl(self, regs, dst, src):
+    # ``debug`` is a trace-time constant (bound via functools.partial at
+    # construction): when False — the default jit wrappers — no check
+    # enters the jaxpr and the compiled program is byte-identical to a
+    # debug-less build.
+    def _plan_impl(self, regs, dst, src, *, debug=False):
         self._trace_counts["plan"] += 1          # python: counts traces only
-        return self.backend.plan(dst, src, self._gated(regs))
+        gated = self._gated(regs)
+        plan = self.backend.plan(dst, src, gated)
+        if debug:
+            sanitize.check_plan(plan, gated, src, self.backend, debug)
+        return plan
 
-    def _dispatch_impl(self, regs, x, dst, src):
+    def _dispatch_impl(self, regs, x, dst, src, *, debug=False):
         self._trace_counts["dispatch"] += 1
-        plan = self.backend.plan(dst, src, self._gated(regs))
-        return self.backend.dispatch(x, plan, regs, self.capacity), plan
+        gated = self._gated(regs)
+        plan = self.backend.plan(dst, src, gated)
+        slabs = self.backend.dispatch(x, plan, regs, self.capacity)
+        if debug:
+            sanitize.check_plan(plan, gated, src, self.backend, debug)
+            sanitize.check_slabs(slabs, debug)
+        return slabs, plan
 
-    def _combine_impl(self, regs, y, plan, weights):
+    def _combine_impl(self, regs, y, plan, weights, *, debug=False):
         self._trace_counts["combine"] += 1
+        if debug:
+            sanitize.check_combine(plan, y.shape[-2], debug)
         return self.backend.combine(y, plan, weights)
 
-    def _transfer_impl(self, regs, x, dst, src, weights, *, apply_fn):
+    def _transfer_impl(self, regs, x, dst, src, weights, *, apply_fn,
+                       debug=False):
         self._trace_counts["transfer"] += 1
         gated = self._gated(regs)
         plan = self.backend.plan(dst, src, gated)
         slabs = self.backend.dispatch(x, plan, gated, self.capacity)
+        if debug:
+            sanitize.check_plan(plan, gated, src, self.backend, debug)
+            sanitize.check_slabs(slabs, debug)
         y = slabs if apply_fn is None else apply_fn(slabs)
+        if debug:
+            sanitize.check_slabs(y, debug)
         return self.backend.combine(y, plan, weights), plan
+
+    # ---- debug routing -------------------------------------------------
+    def _debug_call(self, kind, chk_fn, dbg_fn, plain_fn, *args):
+        """Pick the checked variant for a debug-mode call.  Host-level
+        calls run the checkified program and throw; in-trace calls keep
+        bare checks only under *explicit* debug (the caller functionalizes
+        them) — env-sourced debug must never change programs that did not
+        opt in, so those fall through to the unchecked path."""
+        if _in_trace(*args):
+            if self._debug_explicit:
+                return dbg_fn(*args)
+            return plain_fn(*args)
+        err, out = chk_fn(*args)
+        err.throw()
+        return out
 
     # ---- public API ---------------------------------------------------
     # Every method takes an optional ``registers=`` override: the bound
@@ -260,6 +373,10 @@ class Fabric:
         2
         """
         regs = self.registers if registers is None else registers
+        if self.debug:
+            return self._debug_call("plan", self._chk_plan,
+                                    self._jit_plan_dbg, self._jit_plan,
+                                    regs, dst, src)
         return self._jit_plan(regs, dst, src)
 
     def dispatch(self, x: jax.Array, dst: jax.Array, src: jax.Array, *,
@@ -270,6 +387,10 @@ class Fabric:
         [ports_per_shard, C, D] block for the sharded backend.  Dropped
         packets land nowhere; their error codes are in the returned plan."""
         regs = self.registers if registers is None else registers
+        if self.debug:
+            return self._debug_call("dispatch", self._chk_dispatch,
+                                    self._jit_dispatch_dbg,
+                                    self._jit_dispatch, regs, x, dst, src)
         return self._jit_dispatch(regs, x, dst, src)
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
@@ -281,6 +402,11 @@ class Fabric:
         if weights is None:
             weights = jnp.ones(plan.keep.shape, y.dtype)
         regs = self.registers if registers is None else registers
+        if self.debug:
+            return self._debug_call("combine", self._chk_combine,
+                                    self._jit_combine_dbg,
+                                    self._jit_combine, regs, y, plan,
+                                    weights)
         return self._jit_combine(regs, y, plan, weights)
 
     def transfer(self, x: jax.Array, dst: jax.Array, src: jax.Array,
@@ -307,8 +433,26 @@ class Fabric:
         if weights is None:
             weights = jnp.ones(dst.shape, x.dtype)
         regs = self.registers if registers is None else registers
+        if self.debug:
+            return self._debug_call(
+                "transfer", self._chk_transfer(apply_fn),
+                functools.partial(self._jit_transfer_dbg, apply_fn=apply_fn),
+                functools.partial(self._jit_transfer, apply_fn=apply_fn),
+                regs, x, dst, src, weights)
         return self._jit_transfer(regs, x, dst, src, weights,
                                   apply_fn=apply_fn)
+
+    def _chk_transfer(self, apply_fn):
+        """Checkified host-level transfer, cached per ``apply_fn`` (the
+        same one-compiled-program-per-(shape, fn) contract as the normal
+        path; checkify cannot thread a static callable, so it is closed
+        over here instead)."""
+        fn = self._chk_transfer_cache.get(apply_fn)
+        if fn is None:
+            fn = jax.jit(checkify.checkify(functools.partial(
+                self._transfer_impl, apply_fn=apply_fn, debug=self.debug)))
+            self._chk_transfer_cache[apply_fn] = fn
+        return fn
 
 
 def fabric_for_shell(shell, *, backend="reference", capacity=None,

@@ -1,0 +1,112 @@
+"""Runtime invariant checks for the fabric data plane (checkify).
+
+The static half of this layer is ``tools/fablint`` (rules FAB001-FAB005);
+this is the dynamic half: ``jax.experimental.checkify`` assertions threaded
+through plan/dispatch/combine when a fabric is constructed with
+``debug="sanitize"|"strict"|True`` or under ``REPRO_FABRIC_DEBUG=1``.
+
+Two levels:
+
+- ``"sanitize"`` — structural invariants that hold on every correct plan,
+  whatever the traffic: granted packets carry in-range destinations and
+  slots under the *gated* capacity, per-port grant counts never exceed the
+  gated capacity, granted packets respect the isolation/reset register
+  masks, and no NaN enters a receive slab.  These only fire on a data-plane
+  bug (or NaN traffic) — never on hostile traffic, which the fabric's job
+  is to mask.
+- ``"strict"`` — sanitize plus *fault surfacing*: traffic that the masked
+  path would silently drop raises instead.  A packet with a real (not
+  ``dst = -1`` padding) out-of-range or isolation-blocked destination, or
+  an over-capacity burst (ACK_TIMEOUT), becomes a
+  ``checkify.JaxRuntimeError``.  Quota drops (GRANT_TIMEOUT) stay silent
+  at both levels — WRR quota cuts are policy, not faults.
+
+All checks compile to nothing when debug is off — the normal path never
+imports checkify into its jaxpr (``benchmarks/fabric_bench.py`` pins the
+zero-overhead claim).  See ``docs/invariants.md``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+from repro.core.arbiter import DispatchPlan
+from repro.core.registers import CrossbarRegisters, ErrorCode
+
+LEVELS = ("sanitize", "strict")
+
+
+def check_plan(plan: DispatchPlan, regs: CrossbarRegisters,
+               src: Optional[jax.Array], backend, level: str) -> None:
+    """Assert plan invariants against the *gated* register file.
+
+    ``src`` is the caller's source-port vector; backends that derive the
+    effective source themselves (the sharded backend uses its mesh axis
+    index) expose ``effective_src`` and override it.
+    """
+    n = regs.n_ports
+    keep = plan.keep
+    dst = plan.dst
+    ok_range = ~keep | ((dst >= 0) & (dst < n))
+    checkify.check(jnp.all(ok_range),
+                   "fabric sanitizer: granted packet with out-of-range "
+                   "destination (n_ports={n})", n=jnp.int32(n))
+
+    dstc = jnp.clip(dst, 0, n - 1)
+    cap = regs.capacity[dstc]
+    ok_slot = ~keep | ((plan.slot >= 0) & (plan.slot < cap))
+    checkify.check(jnp.all(ok_slot),
+                   "fabric sanitizer: granted slot outside the gated "
+                   "capacity of its destination port")
+
+    checkify.check(jnp.all(plan.counts <= regs.capacity),
+                   "fabric sanitizer: per-port grant count exceeds the "
+                   "gated capacity (counts={counts})", counts=plan.counts)
+
+    eff = getattr(backend, "effective_src", None)
+    src_eff = src if eff is None else eff(src if src is not None else dst)
+    if src_eff is not None:
+        srcc = jnp.clip(src_eff.astype(jnp.int32), 0, n - 1)
+        allowed = (regs.allowed[srcc, dstc]
+                   & ~regs.reset[srcc] & ~regs.reset[dstc])
+        checkify.check(jnp.all(~keep | allowed),
+                       "fabric sanitizer: granted packet violates the "
+                       "isolation/reset register mask of its (src, dst) "
+                       "pair")
+
+    if level == "strict":
+        real = dst != -1            # -1 is the sanctioned padding sentinel
+        invalid = real & (plan.error == jnp.int32(ErrorCode.INVALID_DEST))
+        checkify.check(~jnp.any(invalid),
+                       "fabric strict: packet sprayed at an invalid "
+                       "destination (out of range or isolation-masked); "
+                       "the masked path would drop it silently")
+        acked_out = plan.error == jnp.int32(ErrorCode.ACK_TIMEOUT)
+        checkify.check(~jnp.any(acked_out),
+                       "fabric strict: over-capacity burst — packets "
+                       "dropped with ACK_TIMEOUT "
+                       "(drops={drops})", drops=plan.drops)
+
+
+def check_slabs(slabs: jax.Array, level: str) -> None:
+    """No NaN may enter a receive slab (it would propagate through the
+    module and combine into packets that were never at fault)."""
+    del level                       # checked at both levels
+    if jnp.issubdtype(slabs.dtype, jnp.floating):
+        checkify.check(~jnp.any(jnp.isnan(slabs)),
+                       "fabric sanitizer: NaN entered a receive slab")
+
+
+def check_combine(plan: DispatchPlan, slab_capacity: int,
+                  level: str) -> None:
+    """Every granted packet must address a slot that exists in the slab
+    actually handed to combine (a smaller slab is legal only for packets
+    the plan already dropped)."""
+    del level
+    ok = ~plan.keep | (plan.slot < slab_capacity)
+    checkify.check(jnp.all(ok),
+                   "fabric sanitizer: granted slot beyond the combine "
+                   "slab's capacity ({c})", c=jnp.int32(slab_capacity))

@@ -17,7 +17,7 @@ Kernels:
 - ``hamming``           — the paper's Hamming(31,26) + multiplier modules,
   bit-parallel over VPU lanes.
 """
-from repro.kernels.crossbar_dispatch import (crossbar_combine,  # noqa: F401
+from repro.kernels.crossbar_dispatch import (crossbar_combine,  # noqa: F401  # fablint: disable=FAB003 (back-compat re-export)
                                              crossbar_dispatch, crossbar_plan)
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.hamming import (hamming_decode, hamming_encode,  # noqa: F401

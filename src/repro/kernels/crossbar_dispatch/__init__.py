@@ -1,2 +1,2 @@
-from repro.kernels.crossbar_dispatch.ops import (  # noqa: F401
+from repro.kernels.crossbar_dispatch.ops import (  # noqa: F401  # fablint: disable=FAB003 (back-compat re-export)
     crossbar_combine, crossbar_dispatch, crossbar_plan)

@@ -25,7 +25,8 @@ def plan_ref(dst: jax.Array, allowed_row: jax.Array, quota_row: jax.Array,
     dst_oh = jax.nn.one_hot(dstc, n_ports, dtype=jnp.int32) \
         * iso_ok[:, None].astype(jnp.int32)
     rank = jnp.cumsum(dst_oh, axis=0) - dst_oh
-    rank = jnp.take_along_axis(rank, dstc[:, None], axis=1)[:, 0]
+    rank = jnp.take_along_axis(rank, dstc[:, None], axis=1,
+                               mode="clip")[:, 0]
     quota = quota_row[dstc]
     cap = capacity[dstc]
     quota_ok = (quota == 0) | (rank < quota)
@@ -82,7 +83,8 @@ def plan_multi_ref(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
         live = ((pair[:, None] == lanes[None, :])
                 & iso_ok[:, None]).astype(jnp.int32)          # [bT, n2]
         ex_cum = jnp.cumsum(live, axis=0) - live
-        rank = (jnp.take_along_axis(ex_cum, pair[:, None], axis=1)[:, 0]
+        rank = (jnp.take_along_axis(ex_cum, pair[:, None], axis=1,
+                                    mode="clip")[:, 0]
                 + live_carry[pair])
         quota_t = quota_flat[pair]
         quota_ok = (quota_t == 0) | (rank < quota_t)
@@ -91,7 +93,7 @@ def plan_multi_ref(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
                jnp.where(~quota_ok, jnp.int32(ErrorCode.GRANT_TIMEOUT),
                          jnp.int32(ErrorCode.OK)))
         granted = jnp.zeros((n2,), jnp.int32).at[pair].add(
-            keep.astype(jnp.int32))
+            keep.astype(jnp.int32), mode="drop")
         return live_carry + jnp.sum(live, axis=0), (
             keep.astype(jnp.int32), jnp.where(iso_ok, rank, 0), err, granted)
 

@@ -120,7 +120,8 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
     cap = expert_capacity(g, moe)
     e_oh = jax.nn.one_hot(dst, E, dtype=jnp.int32)             # [G, gk, E]
     rank = jnp.cumsum(e_oh, axis=1) - e_oh
-    rank = jnp.take_along_axis(rank, dst[..., None], axis=2)[..., 0]
+    rank = jnp.take_along_axis(rank, dst[..., None], axis=2,
+                               mode="clip")[..., 0]
     keep = rank < cap                                          # WRR quota
     if expert_mask is not None:
         iso_ok = expert_mask[dst]
@@ -197,7 +198,8 @@ def moe_apply_gather(params, x: jax.Array, moe: MoEConfig, act: str, *,
     cap = expert_capacity(g, moe)
     e_oh = jax.nn.one_hot(dst, E, dtype=jnp.int32)
     rank = jnp.cumsum(e_oh, axis=1) - e_oh
-    rank = jnp.take_along_axis(rank, dst[..., None], axis=2)[..., 0]
+    rank = jnp.take_along_axis(rank, dst[..., None], axis=2,
+                               mode="clip")[..., 0]
     keep = rank < cap
     if expert_mask is not None:
         iso_ok = expert_mask[dst]
@@ -213,7 +215,8 @@ def moe_apply_gather(params, x: jax.Array, moe: MoEConfig, act: str, *,
     xk = jnp.repeat(xf, k, axis=1)                       # [G, gk, d]
 
     def fill(slabs_g, addr_g, xk_g):
-        return slabs_g.at[addr_g].add(xk_g.astype(slabs_g.dtype))
+        return slabs_g.at[addr_g].add(
+            xk_g.astype(slabs_g.dtype))  # fablint: trash-row
 
     slabs = jnp.zeros((G, E * cap + 1, d), x.dtype)
     slabs = jax.vmap(fill)(slabs, slot_addr, xk)
@@ -233,7 +236,8 @@ def moe_apply_gather(params, x: jax.Array, moe: MoEConfig, act: str, *,
     ye_flat = ye.reshape(G, E * cap, d)
     ye_flat = jnp.concatenate(
         [ye_flat, jnp.zeros((G, 1, d), ye.dtype)], axis=1)  # trash slot
-    back = jnp.take_along_axis(ye_flat, slot_addr[..., None], axis=1)
+    back = jnp.take_along_axis(ye_flat, slot_addr[..., None], axis=1,
+                               mode="clip")
     back = back * (w * keep.astype(w.dtype))[..., None]
     y = back.reshape(G, g, k, d).sum(axis=2).reshape(B, S, d)
 
@@ -460,9 +464,12 @@ def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
     y = y.reshape(T_loc, k, d).sum(axis=1).reshape(B_loc, S, d)
 
     me = jax.lax.axis_index(axis_name)
+    # top_k destinations are always in [0, E); mode="drop" states the OOB
+    # policy outright instead of a clip that would alias onto expert E-1.
     local_counts = jax.lax.psum(
-        jnp.zeros((E,), jnp.int32).at[jnp.clip(dst, 0, E - 1)].add(
-            (plan.keep & (dst // E_loc == me)).astype(jnp.int32)),
+        jnp.zeros((E,), jnp.int32).at[dst].add(
+            (plan.keep & (dst // E_loc == me)).astype(jnp.int32),
+            mode="drop"),
         axis_name)                                         # [E] per-port
     local = jnp.sum(local_counts)
     offered = jnp.asarray(T_loc * k * n_shards, jnp.int32)
@@ -529,8 +536,10 @@ def moe_apply_sharded_reference(params, x: jax.Array, moe: MoEConfig,
                               weights=w, registers=registers)
     y = y.reshape(T, k, d).sum(axis=1).reshape(B, S, d)
 
-    local_counts = jnp.zeros((E,), jnp.int32).at[jnp.clip(dst, 0, E - 1)].add(
-        (plan.keep & (dst // E_loc == src)).astype(jnp.int32))
+    # top_k destinations are always in [0, E); mode="drop" states the OOB
+    # policy outright instead of a clip that would alias onto expert E-1.
+    local_counts = jnp.zeros((E,), jnp.int32).at[dst].add(
+        (plan.keep & (dst // E_loc == src)).astype(jnp.int32), mode="drop")
     local = jnp.sum(local_counts)
     offered = jnp.asarray(T * k, jnp.int32)
     granted = jnp.sum(plan.counts)

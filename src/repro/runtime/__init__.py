@@ -1,4 +1,4 @@
 from repro.runtime.ft import (HeartbeatMonitor, StepWatchdog,  # noqa: F401
                               StragglerStats)
-from repro.runtime.serve import ServeLoop  # noqa: F401
+from repro.runtime.serve import ServeLoop  # noqa: F401  # fablint: disable=FAB003 (back-compat re-export)
 from repro.runtime.train import TrainLoop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,10 @@
+"""FAB001 fixture: implicit OOB indexing, two shapes."""
+import jax.numpy as jnp
+
+
+def gather(y, addr):
+    return jnp.take(y, addr, axis=0)
+
+
+def scatter(slab, addr, x):
+    return slab.at[addr].add(x)

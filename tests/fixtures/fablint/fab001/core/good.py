@@ -1,0 +1,18 @@
+"""FAB001 fixture: explicit modes, trash-row annotation, static index."""
+import jax.numpy as jnp
+
+
+def gather(y, addr):
+    return jnp.take(y, addr, axis=0, mode="clip")
+
+
+def scatter(slab, addr, x):
+    return slab.at[addr].add(x, mode="drop")
+
+
+def scatter_trash(slab, addr, x):
+    return slab.at[addr].add(x)  # fablint: trash-row
+
+
+def static_index(slab, x):
+    return slab.at[0].set(x)

@@ -1,0 +1,6 @@
+"""FAB001 fixture: suppression comment on the flagged line."""
+import jax.numpy as jnp
+
+
+def gather(y, addr):
+    return jnp.take(y, addr, axis=0)  # fablint: disable=FAB001

@@ -1,0 +1,6 @@
+"""FAB001 fixture: outside the data-plane dirs — out of scope."""
+import jax.numpy as jnp
+
+
+def gather(y, addr):
+    return jnp.take(y, addr, axis=0)

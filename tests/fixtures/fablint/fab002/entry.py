@@ -1,0 +1,9 @@
+"""FAB002 fixture: jit entry points reaching hazardous helpers."""
+import jax
+
+from helper import route
+
+
+@jax.jit
+def fwd(x):
+    return route(x, 4)

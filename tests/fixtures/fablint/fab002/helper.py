@@ -1,0 +1,22 @@
+"""FAB002 fixture: concretization hazards in jit-reachable code."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def route(x, n):
+    if x.sum() > 0:                          # traced `if` — hazard
+        return jnp.zeros(n)
+    host = np.asarray(x)                     # host materialization — hazard
+    return int(x[0]) + host.shape[0]         # int() of traced — hazard
+
+
+def static_ok(x, n):
+    if x.shape[0] > n:                       # .shape is static — clean
+        return jnp.zeros(n)
+    if x is None:                            # identity test — clean
+        return jnp.zeros(n)
+    return x
+
+
+def suppressed(x):
+    return int(x[0])  # fablint: disable=FAB002

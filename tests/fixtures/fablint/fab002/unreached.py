@@ -1,0 +1,5 @@
+"""FAB002 fixture: host-side code no jit entry point reaches — clean."""
+
+
+def tally(x):
+    return int(x[0])

@@ -1,0 +1,4 @@
+"""FAB003 fixture: internal code routing through deprecated shims."""
+import repro.core.crossbar
+from repro.kernels.crossbar_dispatch import crossbar_plan
+from repro.runtime.serve import ServeLoop

@@ -1,0 +1,3 @@
+"""FAB003 fixture: the supported seam — clean."""
+from repro.fabric import Fabric, fabric_for_shell
+from repro.runtime.serve import greedy_tokens

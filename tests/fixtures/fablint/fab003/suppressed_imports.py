@@ -1,0 +1,2 @@
+"""FAB003 fixture: sanctioned re-export carries a suppression."""
+from repro.runtime.serve import ServeLoop  # fablint: disable=FAB003

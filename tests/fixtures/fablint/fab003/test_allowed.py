@@ -1,0 +1,3 @@
+"""FAB003 fixture: test files may exercise the shims — out of scope."""
+from repro.kernels.crossbar_dispatch import crossbar_plan
+from repro.runtime.serve import ServeLoop

@@ -1,0 +1,31 @@
+"""FAB004 fixture: registered backends that break the seam."""
+
+
+class DriftedBackend:
+    name = "drifted"
+
+    def plan(self, dst, regs):                 # missing ``src``
+        return None
+
+    def dispatch(self, x, plan, regs, capacity):
+        return x
+
+    def combine(self, y, plan, weights):
+        return y
+
+
+class MissingMethodBackend:
+    name = "missing"
+
+    def plan(self, dst, src, regs):
+        return None
+
+
+_BACKENDS = {
+    "drifted": DriftedBackend,
+    "missing": MissingMethodBackend,
+}
+
+
+def register_fabric_backend(name, cls):
+    _BACKENDS[name] = cls

@@ -1,0 +1,1 @@
+"""FAB004 fixture: kernel package with no ref.py oracle."""

@@ -1,0 +1,2 @@
+def broken_call(x):
+    return x

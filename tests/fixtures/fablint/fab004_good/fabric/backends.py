@@ -1,0 +1,17 @@
+"""FAB004 fixture: conforming backend registry."""
+
+
+class GoodBackend:
+    name = "good"
+
+    def plan(self, dst, src, regs):
+        return None
+
+    def dispatch(self, x, plan, regs, capacity):
+        return x
+
+    def combine(self, y, plan, weights):
+        return y
+
+
+_BACKENDS = {"good": GoodBackend}

@@ -1,0 +1,2 @@
+def okpkg_call(x):
+    return x

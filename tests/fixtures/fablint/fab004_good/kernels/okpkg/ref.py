@@ -1,0 +1,2 @@
+def okpkg_ref(x):
+    return x

@@ -1,0 +1,7 @@
+"""FAB005 fixture: clipped address feeds a gather, no drop accounting."""
+import jax.numpy as jnp
+
+
+def route(y, dst, n):
+    addr = jnp.clip(dst, 0, n - 1)
+    return jnp.take(y, addr, axis=0, mode="clip")

@@ -1,0 +1,18 @@
+"""FAB005 fixture: clips with visible drop accounting or annotation."""
+import jax.numpy as jnp
+
+
+def route_masked(y, dst, n):
+    keep = (dst >= 0) & (dst < n)
+    addr = jnp.clip(dst, 0, n - 1)
+    out = jnp.take(y, addr, axis=0, mode="clip")
+    return out * keep[:, None]
+
+
+def route_annotated(y, dst, n):
+    addr = jnp.clip(dst, 0, n - 1)  # fablint: drop-accounted
+    return jnp.take(y, addr, axis=0, mode="clip")
+
+
+def clip_values_not_address(x):
+    return jnp.clip(x, 0.0, 1.0)

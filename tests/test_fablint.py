@@ -1,0 +1,175 @@
+"""fablint self-tests: fixture-driven per-rule behavior + head cleanliness.
+
+Each rule gets a violating fixture, a clean fixture, and a suppression
+fixture under ``tests/fixtures/fablint/``; the final test pins the real
+tree: ``python -m tools.fablint src/repro`` exits 0 at head, so any PR
+that reintroduces an implicit-OOB gather, a retrace hazard, a shim
+import, a seam drift or a bare address clip fails CI with a rule code and
+file:line.  fablint is stdlib-only — these tests import no jax.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+FIX = REPO / "tests" / "fixtures" / "fablint"
+
+sys.path.insert(0, str(REPO))
+
+from tools.fablint import LintError, lint_paths  # noqa: E402
+from tools.fablint.cli import main  # noqa: E402
+from tools.fablint.rules import RULES  # noqa: E402
+
+
+def _codes(violations):
+    return [v.code for v in violations]
+
+
+def _lint(path, **kw):
+    return lint_paths([str(path)], **kw)
+
+
+# ---------------------------------------------------------------------------
+# FAB001 — implicit OOB indexing
+# ---------------------------------------------------------------------------
+def test_fab001_flags_take_and_at_without_mode():
+    vs = _lint(FIX / "fab001", select=["FAB001"])
+    assert _codes(vs) == ["FAB001", "FAB001"]
+    assert all("core/bad.py" in v.path for v in vs)
+    assert vs[0].line == 6 and "jnp.take" in vs[0].message
+    assert vs[1].line == 10 and ".at[...].add" in vs[1].message
+
+
+def test_fab001_accepts_mode_trash_row_and_suppression():
+    vs = _lint(FIX / "fab001", select=["FAB001"])
+    touched = {v.path for v in vs}
+    assert not any("good.py" in p or "suppressed.py" in p
+                   or "outside.py" in p for p in touched)
+
+
+# ---------------------------------------------------------------------------
+# FAB002 — retrace hazards
+# ---------------------------------------------------------------------------
+def test_fab002_flags_concretization_in_jit_reachable_code():
+    vs = _lint(FIX / "fab002", select=["FAB002"])
+    msgs = [(Path(v.path).name, v.line) for v in vs]
+    assert ("helper.py", 7) in msgs          # traced `if`
+    assert ("helper.py", 9) in msgs          # np.asarray
+    assert ("helper.py", 10) in msgs         # int()
+    assert len(vs) == 3
+
+
+def test_fab002_skips_static_escapes_unreached_code_and_suppressions():
+    vs = _lint(FIX / "fab002", select=["FAB002"])
+    for v in vs:
+        assert "unreached.py" not in v.path
+        assert v.line not in (14, 16, 22), v  # static_ok / suppressed
+
+
+# ---------------------------------------------------------------------------
+# FAB003 — deprecated shim imports
+# ---------------------------------------------------------------------------
+def test_fab003_flags_all_three_shim_surfaces():
+    vs = _lint(FIX / "fab003", select=["FAB003"])
+    assert _codes(vs) == ["FAB003"] * 3
+    assert all("bad_imports.py" in v.path for v in vs)
+    joined = " ".join(v.message for v in vs)
+    assert "repro.core.crossbar" in joined
+    assert "crossbar_plan" in joined
+    assert "ServeLoop" in joined
+
+
+def test_fab003_exempts_tests_clean_imports_and_suppressions():
+    vs = _lint(FIX / "fab003", select=["FAB003"])
+    touched = {v.path for v in vs}
+    assert not any("good_imports" in p or "suppressed_imports" in p
+                   or "test_allowed" in p for p in touched)
+
+
+# ---------------------------------------------------------------------------
+# FAB004 — backend seam conformance
+# ---------------------------------------------------------------------------
+def test_fab004_flags_drift_missing_methods_and_missing_ref():
+    vs = _lint(FIX / "fab004_bad", select=["FAB004"])
+    msgs = " | ".join(v.message for v in vs)
+    assert "DriftedBackend.plan" in msgs and "drifts" in msgs
+    assert "MissingMethodBackend" in msgs and "dispatch" in msgs
+    assert "lacks ref.py" in msgs
+    assert len(vs) == 4                      # drift + 2 missing + no-ref
+
+
+def test_fab004_clean_tree_passes():
+    assert _lint(FIX / "fab004_good", select=["FAB004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# FAB005 — bare clip on addresses
+# ---------------------------------------------------------------------------
+def test_fab005_flags_bare_clip_feeding_an_index():
+    vs = _lint(FIX / "fab005", select=["FAB005"])
+    assert _codes(vs) == ["FAB005"]
+    assert "bad_clip.py" in vs[0].path and vs[0].line == 6
+
+
+def test_fab005_accepts_accounting_annotation_and_suppression():
+    vs = _lint(FIX / "fab005", select=["FAB005"])
+    assert not any("good_clip" in v.path or "suppressed_clip" in v.path
+                   for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# engine + CLI plumbing
+# ---------------------------------------------------------------------------
+def test_select_and_ignore_filters():
+    all_vs = _lint(FIX / "fab001")
+    only = _lint(FIX / "fab001", select=["FAB003"])
+    ignored = _lint(FIX / "fab001", ignore=["FAB001"])
+    assert {v.code for v in all_vs} == {"FAB001"}
+    assert only == []
+    assert not any(v.code == "FAB001" for v in ignored)
+
+
+def test_missing_path_is_a_lint_error():
+    with pytest.raises(LintError):
+        lint_paths([str(FIX / "does_not_exist")])
+
+
+def test_violation_format_is_path_line_col_code():
+    v = _lint(FIX / "fab001", select=["FAB001"])[0]
+    s = str(v)
+    assert s.startswith(f"{v.path}:{v.line}:{v.col}: FAB001 ")
+
+
+def test_cli_exit_codes_and_listing(capsys):
+    assert main([str(FIX / "fab001"), "--select", "FAB001"]) == 1
+    assert main([str(FIX / "fab004_good")]) == 0
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule.code in out
+
+
+def test_every_rule_has_code_title_and_docstring():
+    codes = [r.code for r in RULES]
+    assert codes == sorted(codes) and len(set(codes)) == len(codes)
+    for rule in RULES:
+        assert rule.code.startswith("FAB")
+        assert rule.title
+        assert rule.__doc__ and len(rule.__doc__.strip()) > 40
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean at head
+# ---------------------------------------------------------------------------
+def test_src_repro_is_clean_at_head():
+    vs = lint_paths([str(REPO / "src" / "repro")])
+    assert vs == [], "\n".join(str(v) for v in vs)
+
+
+def test_module_entry_point_runs_clean_on_src():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.fablint", "src/repro"],
+        cwd=str(REPO), capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

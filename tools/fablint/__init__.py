@@ -1,0 +1,34 @@
+"""fablint — static invariant analyzer for the elastic-fabric repro.
+
+The paper's shell *masks* invalid communication requests in hardware; this
+repo's analogous invariants (trash-row drop addressing, register masking,
+per-tenant slot isolation, zero-retrace traced registers) live in code that
+a refactor can silently weaken — XLA clips or drops out-of-bounds work
+instead of faulting, so a reintroduced cross-tenant read produces plausible
+numbers, not a crash.  ``fablint`` encodes those invariants as named,
+suppressable AST rules over ``src/repro``:
+
+- **FAB001** implicit out-of-bounds indexing (gather/scatter without an
+  explicit ``mode=`` or trash-row annotation) in the data-plane dirs;
+- **FAB002** retrace hazards — concretization of traced values inside
+  functions reachable from a ``jax.jit`` entry point;
+- **FAB003** internal imports of deprecated shims from non-test code;
+- **FAB004** fabric-backend seam conformance + kernel/ref pairing;
+- **FAB005** bare ``jnp.clip`` on address arithmetic with no adjacent
+  drop accounting.
+
+Usage (stdlib-only, importable without jax)::
+
+    python -m tools.fablint src/repro            # exit 1 on violations
+    python -m tools.fablint --list-rules
+
+Suppressions are line-scoped ``# fablint: disable=FAB001`` (or
+``disable-file=``); the sanctioned scatter idiom is annotated
+``# fablint: trash-row``.  The runtime half of this layer is the
+``jax.experimental.checkify`` sanitizer behind ``Fabric(debug=True)`` /
+``REPRO_FABRIC_DEBUG=1`` — see ``docs/invariants.md``.
+"""
+from tools.fablint.engine import (LintError, Project, SourceFile,  # noqa: F401
+                                  Violation, lint_paths)
+from tools.fablint.rules import RULES  # noqa: F401
+from tools.fablint.cli import main  # noqa: F401

@@ -1,0 +1,5 @@
+import sys
+
+from tools.fablint.cli import main
+
+sys.exit(main())

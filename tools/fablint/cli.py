@@ -1,0 +1,59 @@
+"""Command-line front end: ``python -m tools.fablint [paths...]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from tools.fablint.engine import LintError, lint_paths
+
+
+def _list_rules() -> str:
+    from tools.fablint.rules import RULES
+
+    blocks = []
+    for rule in RULES:
+        doc = (rule.__doc__ or "").strip()
+        blocks.append(f"{rule.code}  {rule.title}\n\n{doc}\n")
+    return "\n".join(blocks)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="fablint",
+        description="Static invariant analyzer for the elastic-fabric "
+                    "repro (rules FAB001-FAB005).")
+    parser.add_argument("paths", nargs="*", default=[],
+                        help="files or directory roots to lint "
+                             "(default: src/repro)")
+    parser.add_argument("--select", action="append", default=None,
+                        metavar="CODE",
+                        help="run only these rule codes (repeatable)")
+    parser.add_argument("--ignore", action="append", default=[],
+                        metavar="CODE",
+                        help="skip these rule codes (repeatable)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalogue and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    paths = args.paths or ["src/repro"]
+    try:
+        violations = lint_paths(paths, select=args.select,
+                                ignore=args.ignore)
+    except LintError as e:
+        print(f"fablint: error: {e}", file=sys.stderr)
+        return 2
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"fablint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

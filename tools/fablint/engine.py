@@ -1,0 +1,146 @@
+"""fablint engine: file loading, suppression comments, rule running.
+
+Pure stdlib (``ast`` + ``re``) so the lint gate needs no jax install.  The
+unit of analysis is a :class:`Project` — every ``.py`` file under the lint
+roots, parsed once — because two of the rules are cross-file (FAB002
+reachability from jit entry points, FAB004 backend-seam conformance).
+
+Comment grammar (all line-scoped to the flagged *expression's* span, so a
+trailing comment on any continuation line of a multi-line call counts):
+
+- ``# fablint: disable=FAB001[,FAB002...]`` — suppress those rules here;
+- ``# fablint: disable-file=FAB003`` — suppress for the whole file;
+- ``# fablint: trash-row`` — marks the sanctioned scatter idiom (the slab
+  carries an explicit trash row that absorbs dropped packets; FAB001
+  accepts it in lieu of ``mode=``);
+- ``# fablint: drop-accounted`` — marks clip sites whose drop accounting
+  lives elsewhere (FAB005 accepts it).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*fablint:\s*disable(?P<file>-file)?\s*=\s*(?P<codes>[A-Z0-9,\s]+)")
+_ANNOT_RE = re.compile(r"#\s*fablint:\s*(?P<marker>trash-row|drop-accounted)")
+
+
+class LintError(Exception):
+    """A path could not be linted (missing, unparseable, not python)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule finding, formatted ``path:line:col: CODE message``."""
+
+    path: str          # display path (as the CLI received it)
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class SourceFile:
+    """One parsed python file plus its fablint comment directives."""
+
+    def __init__(self, path: Path, root: Path, display: str):
+        self.path = path
+        self.root = root
+        # Rule scoping matches on the path relative to the lint root
+        # (e.g. ``core/arbiter.py`` when linting ``src/repro``).
+        self.rel = path.relative_to(root).as_posix()
+        self.display = display
+        try:
+            self.text = path.read_text()
+            self.tree = ast.parse(self.text, filename=str(path))
+        except (OSError, SyntaxError, ValueError) as e:
+            raise LintError(f"{display}: cannot lint ({e})") from e
+        self.lines = self.text.splitlines()
+        self._line_suppressions: Dict[int, Set[str]] = {}
+        self._file_suppressions: Set[str] = set()
+        self._annotations: Dict[int, Set[str]] = {}
+        for lineno, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                codes = {c.strip() for c in m.group("codes").split(",")
+                         if c.strip()}
+                if m.group("file"):
+                    self._file_suppressions |= codes
+                else:
+                    self._line_suppressions.setdefault(lineno, set()).update(
+                        codes)
+            a = _ANNOT_RE.search(line)
+            if a:
+                self._annotations.setdefault(lineno, set()).add(
+                    a.group("marker"))
+
+    # ---- directive queries (span = lineno..end_lineno of the node) -----
+    def _span(self, lineno: int, end_lineno: Optional[int]) -> range:
+        return range(lineno, (end_lineno or lineno) + 1)
+
+    def suppressed(self, code: str, lineno: int,
+                   end_lineno: Optional[int] = None) -> bool:
+        if code in self._file_suppressions:
+            return True
+        return any(code in self._line_suppressions.get(ln, ())
+                   for ln in self._span(lineno, end_lineno))
+
+    def annotated(self, marker: str, lineno: int,
+                  end_lineno: Optional[int] = None) -> bool:
+        return any(marker in self._annotations.get(ln, ())
+                   for ln in self._span(lineno, end_lineno))
+
+    def violation(self, node: ast.AST, code: str, message: str) -> Violation:
+        return Violation(path=self.display, line=getattr(node, "lineno", 1),
+                         col=getattr(node, "col_offset", 0) + 1,
+                         code=code, message=message)
+
+
+class Project:
+    """Every file under the lint roots, parsed once and shared by rules."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+
+    @staticmethod
+    def load(paths: Iterable[str]) -> "Project":
+        files: List[SourceFile] = []
+        for raw in paths:
+            p = Path(raw)
+            if not p.exists():
+                raise LintError(f"{raw}: no such file or directory")
+            if p.is_file():
+                files.append(SourceFile(p, p.parent, raw))
+                continue
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                display = str(Path(raw) / f.relative_to(p))
+                files.append(SourceFile(f, p, display))
+        return Project(files)
+
+
+def lint_paths(paths: Iterable[str], *,
+               select: Optional[Iterable[str]] = None,
+               ignore: Iterable[str] = ()) -> List[Violation]:
+    """Run every (selected) rule over ``paths``; returns surviving
+    violations sorted by location.  ``paths`` may mix files and directory
+    roots; rule path-scoping is relative to each root."""
+    from tools.fablint.rules import RULES
+
+    project = Project.load(paths)
+    selected = set(select) if select is not None else {r.code for r in RULES}
+    selected -= set(ignore)
+    out: List[Violation] = []
+    for rule in RULES:
+        if rule.code not in selected:
+            continue
+        out.extend(rule().check(project))
+    return sorted(out, key=lambda v: (v.path, v.line, v.col, v.code))
