@@ -21,6 +21,7 @@ from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
                                      bench_fig6_scaling, bench_kernels_cpu,
                                      bench_latency)
 from benchmarks.roofline_bench import bench_roofline
+from benchmarks.serve_bench import bench_serve
 
 BENCHES = {
     "fig5": ("Fig 5 — §V-C elasticity use case", bench_fig5_elasticity),
@@ -36,13 +37,16 @@ BENCHES = {
     "moe": ("models.moe — dispatch impls incl. mesh expert parallelism",
             bench_moe),
     "roofline": ("§Roofline — dry-run aggregation", bench_roofline),
+    "serve": ("repro.serve — steady-state decode fast path "
+              "(plan cache on/off + reconfiguration storm)", bench_serve),
 }
 
 # Stable, machine-readable perf trajectory: one schema-versioned file per
 # tracked bench, overwritten in place so successive PRs diff cleanly.
 TRAJECTORY_FILES = {"fabric": "BENCH_fabric.json",
                     "manager": "BENCH_manager.json",
-                    "moe": "BENCH_moe.json"}
+                    "moe": "BENCH_moe.json",
+                    "serve": "BENCH_serve.json"}
 
 
 def main(argv=None) -> int:

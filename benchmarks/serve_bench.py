@@ -1,0 +1,146 @@
+"""Steady-state serving bench for ``repro.serve`` + the fabric plan cache.
+
+Two scenarios over the seeded :class:`~repro.serve.ServeHarness`:
+
+- **steady_state** — 2048 front-loaded streams through 1024 concurrent
+  decode slots (reference backend), once with the fabric plan cache on and
+  once off, same seed.  The gated number is the median *pure-decode* tick
+  (no admission, no reconfiguration — the path the epoch-keyed cache
+  accelerates) and the sha256 digest of every completion: the cached run
+  must be bit-identical and at most half the uncached tick.
+- **storm** — heavy-tailed arrivals with FailRegion / heal / Shrink / Grow
+  posted mid-run: every post bumps the register epoch and must invalidate
+  the cache (counted), while ``fabric_retraces`` stays at 1 — replanning
+  reuses the compiled program, the cache only skips re-*executing* it.
+
+Wall-time rows are machine-relative, so ``tools/check_bench_regression.py``
+gates the *within-file* cached/uncached ratio (and the pure-function rows:
+digests equal, retraces == 1) rather than absolute microseconds.  GC is
+paused around the timed runs; each configuration takes the
+best-median-of-3 repeats, standard microbenchmark discipline.
+"""
+from __future__ import annotations
+
+import gc
+from typing import Dict, List, Tuple
+
+STEADY_STREAMS = 2048
+STEADY_SLOTS = 1024
+STEADY_MAX_NEW = 48
+STORM_STREAMS = 2048
+STORM_SLOTS = 256
+SEED = 11
+REPEATS = 3
+
+
+def _server(plan_cache: bool, n_slots: int):
+    from repro.core.elastic import Region
+    from repro.core.module import ModuleFootprint
+    from repro.serve import SeededEngine
+    from repro.shell import Shell
+    from repro.shell.server import ElasticServer
+
+    GB = 1 << 30
+    shell = Shell([Region(rid=i, n_chips=8, hbm_bytes=8 * GB)
+                   for i in range(4)])
+    shell.submit("svc", [ModuleFootprint(GB, 1e9, 4096)] * 2, app_id=0)
+    server = ElasticServer(shell, n_slots=n_slots, plan_cache=plan_cache)
+    server.register_engine(0, SeededEngine(seed=SEED))
+    return server
+
+
+def _best_of(arrivals, plan_cache: bool, n_slots: int, reconfigs=()):
+    """Fresh server per repeat; keep the repeat with the best median
+    steady tick (wall-time noise is one-sided — slow outliers only)."""
+    from repro.serve import ServeHarness
+
+    best = None
+    for _ in range(REPEATS):
+        report = ServeHarness(_server(plan_cache, n_slots), arrivals,
+                              reconfigs=reconfigs).run()
+        if (best is None
+                or report.steady_tick_p50_us < best.steady_tick_p50_us):
+            best = report
+    return best
+
+
+def _steady_row(mode: str, cache: str, r) -> dict:
+    return {"mode": mode, "cache": cache, "streams": r.n_streams,
+            "slots": r.n_slots, "ticks": r.ticks,
+            "steady_ticks": r.steady_ticks, "tokens": r.tokens,
+            "decode_tick_p50_us": round(r.steady_tick_p50_us, 1),
+            "decode_tick_p99_us": round(r.steady_tick_p99_us, 1),
+            "tokens_per_s": round(r.tokens_per_s),
+            "plan_cache_hit_rate": round(r.plan_cache_hit_rate, 3),
+            "fabric_retraces": r.fabric_retraces,
+            "token_digest": r.token_digest[:16]}
+
+
+def bench_serve() -> Tuple[List[dict], Dict[str, str]]:
+    from repro.serve import (ReconfigEvent, front_loaded_arrivals,
+                             heavy_tailed_arrivals)
+
+    steady = front_loaded_arrivals(STEADY_STREAMS, seed=SEED,
+                                   max_new=STEADY_MAX_NEW)
+    bursty = heavy_tailed_arrivals(STORM_STREAMS, seed=SEED,
+                                   mean_gap_ticks=0.1)
+    storm_script = lambda: [
+        ReconfigEvent(20, lambda sh: sh.fail_region(2), "fail R2"),
+        ReconfigEvent(35, lambda sh: sh.heal_region(2), "heal R2"),
+        ReconfigEvent(50, lambda sh: sh.shrink("svc", 1), "shrink svc"),
+        ReconfigEvent(65, lambda sh: sh.grow("svc", 1), "grow svc"),
+    ]
+
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        on = _best_of(steady, True, STEADY_SLOTS)
+        off = _best_of(steady, False, STEADY_SLOTS)
+        storm_on = _best_of(bursty, True, STORM_SLOTS,
+                            reconfigs=storm_script())
+        storm_off = _best_of(bursty, False, STORM_SLOTS,
+                             reconfigs=storm_script())
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+
+    ratio = (on.steady_tick_p50_us / off.steady_tick_p50_us
+             if off.steady_tick_p50_us else 0.0)
+    rows = [
+        _steady_row("steady_state", "on", on),
+        _steady_row("steady_state", "off", off),
+        {"mode": "steady_state_ratio",
+         "concurrent_streams": STEADY_SLOTS,
+         "cached_over_uncached": round(ratio, 3),
+         "bit_identical": on.token_digest == off.token_digest},
+        {"mode": "storm", "cache": "on", "streams": storm_on.n_streams,
+         "slots": storm_on.n_slots, "completions": storm_on.completions,
+         "tokens": storm_on.tokens, "reconfigs": storm_on.reconfigs,
+         "fabric_retraces": storm_on.fabric_retraces,
+         "plan_cache_invalidations": storm_on.plan_cache_invalidations,
+         "plan_cache_hit_rate": round(storm_on.plan_cache_hit_rate, 3),
+         "admission_p50_ticks": storm_on.admission_p50_ticks,
+         "admission_p99_ticks": storm_on.admission_p99_ticks,
+         "token_digest": storm_on.token_digest[:16]},
+        {"mode": "storm_identity",
+         "bit_identical":
+             storm_on.token_digest == storm_off.token_digest,
+         "reconfigs": storm_on.reconfigs,
+         "fabric_retraces": storm_on.fabric_retraces},
+    ]
+    claims = {
+        "bit_identical": ("cached and uncached runs produce sha256-equal "
+                          "completion streams in both scenarios — the "
+                          "cache is a pure memo, never a semantic change"),
+        "steady_state": (f"median pure-decode tick with the plan cache is "
+                         f"{ratio:.2f}x the uncached tick at "
+                         f"{STEADY_SLOTS} concurrent streams "
+                         f"(gate: <= 0.75, see check_bench_regression)"),
+        "zero_retrace": ("fabric_retraces stays 1 across every mid-run "
+                         "FailRegion/heal/Shrink/Grow — epoch bumps "
+                         "invalidate cache *entries*, compiled programs "
+                         "are reused"),
+        "deterministic": ("counting rows (tokens, completions, digests, "
+                          "invalidations) are pure functions of the seed"),
+    }
+    return rows, claims

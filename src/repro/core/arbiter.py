@@ -167,6 +167,18 @@ def flat_slot_addr(plan: DispatchPlan, n_ports: int,
                      jnp.int32(n_ports * capacity))
 
 
+def dispatch_at(x: jax.Array, daddr: jax.Array, n_ports: int,
+                capacity: int) -> jax.Array:
+    """Scatter packets [T, D] into destination slabs at precomputed flat
+    addresses (``daddr = flat_slot_addr(plan, ...)``).  The address-vector
+    half of :func:`dispatch`, split out so the fabric's epoch-keyed plan
+    cache can reuse a memoized ``daddr`` across steady-state ticks."""
+    T, D = x.shape
+    slab = jnp.zeros((n_ports * capacity + 1, D),
+                     x.dtype).at[daddr].add(x)  # fablint: trash-row
+    return slab[:n_ports * capacity].reshape(n_ports, capacity, D)
+
+
 def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
              capacity: int) -> jax.Array:
     """Scatter packets [T, D] into destination slabs [n_ports, capacity, D].
@@ -175,11 +187,29 @@ def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
     flat [S*C, D] slab (plus one trash row for drops) is an exact scatter —
     bit-identical to :func:`dispatch_dense`, at O(T*D) work and memory.
     """
-    T, D = x.shape
-    addr = flat_slot_addr(plan, n_ports, capacity)
-    slab = jnp.zeros((n_ports * capacity + 1, D),
-                     x.dtype).at[addr].add(x)  # fablint: trash-row
-    return slab[:n_ports * capacity].reshape(n_ports, capacity, D)
+    return dispatch_at(x, flat_slot_addr(plan, n_ports, capacity),
+                       n_ports, capacity)
+
+
+def combine_addr(plan: DispatchPlan, n_ports: int,
+                 capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-packet gather address into a flat [n_ports * capacity, D] result
+    slab plus its validity mask — the address-vector half of
+    :func:`combine`, memoizable per plan (the fabric's epoch-keyed cache)."""
+    ok = plan.keep & (plan.slot < capacity)
+    addr = (jnp.clip(plan.dst, 0, n_ports - 1) * capacity
+            + jnp.where(ok, plan.slot, 0))
+    return addr, ok
+
+
+def combine_at(y: jax.Array, caddr: jax.Array, cmask: jax.Array,
+               weights: jax.Array) -> jax.Array:
+    """Gather result-slab rows at precomputed addresses back to packet
+    order, masking dropped packets to zero (``caddr``/``cmask`` from
+    :func:`combine_addr` for a [S, C, D] slab of matching shape)."""
+    S, C, D = y.shape
+    out = jnp.take(y.reshape(S * C, D), caddr, axis=0, mode="clip")
+    return out * (cmask.astype(y.dtype) * weights)[:, None]
 
 
 def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:
@@ -191,10 +221,8 @@ def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:
     unchanged upstream).  Bit-identical to :func:`combine_dense`.
     """
     S, C, D = y.shape
-    ok = plan.keep & (plan.slot < C)
-    addr = jnp.clip(plan.dst, 0, S - 1) * C + jnp.where(ok, plan.slot, 0)
-    out = jnp.take(y.reshape(S * C, D), addr, axis=0, mode="clip")
-    return out * (ok.astype(y.dtype) * weights)[:, None]
+    caddr, cmask = combine_addr(plan, S, C)
+    return combine_at(y, caddr, cmask, weights)
 
 
 # ----------------------------------------------------------------------

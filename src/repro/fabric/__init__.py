@@ -18,15 +18,18 @@ Migration: ``repro.core.crossbar`` (``exchange_local`` / ``exchange_sharded``
 entry points are now thin compatibility shims over these backends.
 """
 from repro.core.arbiter import DispatchPlan                     # noqa: F401
-from repro.fabric.backends import (PallasBackend,               # noqa: F401
+from repro.fabric.backends import (CombineRoute,                # noqa: F401
+                                   PallasBackend,
                                    ReferenceBackend, ShardedBackend,
                                    backend_names, get_backend,
                                    register_fabric_backend)
+from repro.fabric.cache import PlanCache, plan_key              # noqa: F401
 from repro.fabric.fabric import (DEBUG_ENV_VAR, Fabric,         # noqa: F401
                                  fabric_for_shell)
 
 __all__ = [
     "Fabric", "fabric_for_shell", "DispatchPlan", "DEBUG_ENV_VAR",
+    "PlanCache", "plan_key", "CombineRoute",
     "ReferenceBackend", "PallasBackend", "ShardedBackend",
     "get_backend", "register_fabric_backend", "backend_names",
 ]

@@ -51,6 +51,7 @@ register rewrite re-routes traffic through already-compiled dispatch code.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Optional
 
 import jax
@@ -86,6 +87,9 @@ class ReferenceBackend:
     .dispatch_dense`` / ``combine_dense``, the property suite's oracles."""
 
     name = "reference"
+    #: data movement is the shared flat-address scatter/gather — the
+    #: fabric's plan cache may substitute memoized address vectors.
+    uses_shared_scatter = True
 
     def plan(self, dst: jax.Array, src: jax.Array,
              regs: CrossbarRegisters) -> DispatchPlan:
@@ -133,6 +137,13 @@ class PallasBackend:
         self.block_t = block_t
         self.interpret = interpret
         self.data_plane = data_plane
+
+    @property
+    def uses_shared_scatter(self) -> bool:
+        """True on the default scatter data plane (the fabric's plan cache
+        may substitute memoized address vectors); the historical blockwise
+        MXU kernels move data their own way."""
+        return self.data_plane == "scatter"
 
     def plan(self, dst: jax.Array, src: jax.Array,
              regs: CrossbarRegisters) -> DispatchPlan:
@@ -192,6 +203,29 @@ class PallasBackend:
 # ----------------------------------------------------------------------
 # sharded — regions as shards of a mesh axis (inside shard_map)
 # ----------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CombineRoute:
+    """The ``all_to_all`` lane layout of one sharded combine, persisted.
+
+    ``ShardedBackend.combine`` routes *addresses* before it routes rows:
+    each source scatters the slab rows its packets occupy into
+    per-destination-shard lanes and one ``all_to_all`` delivers them.  That
+    address half depends only on the plan (which depends only on the
+    offered packets and the register epoch) — so steady-state decode ticks
+    can build it once per reconfiguration (``build_route``) and replay it
+    (``combine(..., route=...)``), paying ICI setup per epoch instead of
+    per token.  Replaying a route built for a different plan/slab shape is
+    a correctness bug on the caller.
+    """
+
+    addr_recv: jax.Array   # [n_src, W] int32 — my slab rows to serve, per
+    #                        requesting source shard (-1 = empty lane row)
+    keep: jax.Array        # [T] bool — granted and within this slab depth
+    pos: jax.Array         # [T] int32 — packet's lane position in its group
+    dshard: jax.Array      # [T] int32 — destination shard per packet
+
+
 def _axis_size(axis_name: str) -> int:
     fn = getattr(jax.lax, "axis_size", None)
     if fn is not None:
@@ -211,6 +245,9 @@ class ShardedBackend:
     are psummed so every shard sees the oracle's global histogram."""
 
     name = "sharded"
+    #: slabs are partitioned across the axis; the fabric's single-device
+    #: address cache does not describe this data plane.
+    uses_shared_scatter = False
 
     def __init__(self, axis_name: str):
         self.axis_name = axis_name
@@ -291,26 +328,20 @@ class ShardedBackend:
                                   concat_axis=0, tiled=False)
         return jnp.sum(recv, axis=0)                         # [P, C, D]
 
-    def combine(self, y: jax.Array, plan: DispatchPlan,
-                weights: jax.Array) -> jax.Array:
-        """Local result slabs [P, C, D] -> local packets [T_loc, D], weighted.
-
-        Address-route gather: each source shard sends, per destination
-        shard, the local slab rows its packets occupy (one ``all_to_all``
-        of int addresses), the destination gathers those rows out of its
-        own [P, C, D] block, and a second ``all_to_all`` carries them
-        home.  Bytes on the interconnect are O(packets · D) — the
-        all-gather of *entire* result slabs this replaces shipped the full
-        [n_src, P, C, D] capacity surface to every shard, even though each
-        source only reads its own packets' rows.  Dropped packets get
-        zeros."""
+    def build_route(self, plan: DispatchPlan,
+                    capacity: int) -> CombineRoute:
+        """The address half of :meth:`combine`: one ``all_to_all`` of int
+        addresses that tells every shard which of its slab rows each
+        source's packets occupy.  Depends only on the plan and the slab
+        depth — persist it across ticks within a register epoch and replay
+        via ``combine(..., route=...)`` (a shell event that bumps the epoch
+        changes the plan, so the route must be rebuilt with it)."""
         ax = self.axis_name
         n_src = _axis_size(ax)
-        pps, C, D = y.shape
-        n_dst = n_src * pps
+        n_dst = plan.counts.shape[0]
+        pps = n_dst // n_src
+        C = capacity
         T = plan.dst.shape[0]
-        if T == 0 or C == 0:        # nothing sent / nothing grantable
-            return jnp.zeros((T, D), y.dtype)
         # Row budget per (source, destination-shard) lane: a source cannot
         # land more packets on one shard than it has packets, nor more than
         # the shard's port block holds.
@@ -319,7 +350,8 @@ class ShardedBackend:
         dshard = dstc // pps
         # Over-slab slots drop like everywhere else on the scatter data
         # plane (the dispatch trashed them via ``flat_slot_addr``); without
-        # this guard the clip below would alias them onto the last row.
+        # this guard the clip in ``combine`` would alias them onto the
+        # last row.
         keep = plan.keep & (plan.slot < C)
         # Position of each kept packet within its destination-shard group.
         pos = arbiter._stream_ranks(dshard, keep, n_src)
@@ -332,19 +364,52 @@ class ShardedBackend:
         addr_send = addr_send.reshape(n_src, W + 1)[:, :W]
         addr_recv = jax.lax.all_to_all(addr_send, ax, split_axis=0,
                                        concat_axis=0, tiled=False)
+        return CombineRoute(addr_recv=addr_recv, keep=keep, pos=pos,
+                            dshard=dshard)
+
+    def combine(self, y: jax.Array, plan: DispatchPlan,
+                weights: jax.Array, *,
+                route: Optional[CombineRoute] = None) -> jax.Array:
+        """Local result slabs [P, C, D] -> local packets [T_loc, D], weighted.
+
+        Address-route gather: each source shard sends, per destination
+        shard, the local slab rows its packets occupy (one ``all_to_all``
+        of int addresses), the destination gathers those rows out of its
+        own [P, C, D] block, and a second ``all_to_all`` carries them
+        home.  Bytes on the interconnect are O(packets · D) — the
+        all-gather of *entire* result slabs this replaces shipped the full
+        [n_src, P, C, D] capacity surface to every shard, even though each
+        source only reads its own packets' rows.  Dropped packets get
+        zeros.
+
+        ``route`` replays a persisted :class:`CombineRoute` (built by
+        :meth:`build_route` for THIS plan and this slab depth), skipping
+        the address ``all_to_all`` — the steady-state mode where ICI
+        setup is paid once per reconfiguration, not per token.  Results
+        are bit-identical with and without a route."""
+        ax = self.axis_name
+        n_src = _axis_size(ax)
+        pps, C, D = y.shape
+        T = plan.dst.shape[0]
+        if T == 0 or C == 0:        # nothing sent / nothing grantable
+            return jnp.zeros((T, D), y.dtype)
+        if route is None:
+            route = self.build_route(plan, C)
+        W = route.addr_recv.shape[-1]
         # mode="clip" IS the old jnp.clip(addr_recv, 0, pps*C-1): -1 marks
         # an empty lane row and clips to row 0, which the mask below zeros.
-        rows = jnp.take(y.reshape(pps * C, D), addr_recv, axis=0,
+        rows = jnp.take(y.reshape(pps * C, D), route.addr_recv, axis=0,
                         mode="clip")
-        rows = rows * (addr_recv >= 0).astype(y.dtype)[..., None]
+        rows = rows * (route.addr_recv >= 0).astype(y.dtype)[..., None]
         back = jax.lax.all_to_all(rows, ax, split_axis=0,
                                   concat_axis=0, tiled=False)
         flat = back.reshape(n_src * W, D)
         # In-range by construction (dshard < n_src, min(pos, W-1) < W);
         # dropped packets read a garbage row that `keep` zeros right after.
-        out = jnp.take(flat, dshard * W + jnp.minimum(pos, W - 1), axis=0,
-                       mode="clip")
-        return out * (keep.astype(y.dtype) * weights)[:, None]
+        out = jnp.take(flat,
+                       route.dshard * W + jnp.minimum(route.pos, W - 1),
+                       axis=0, mode="clip")
+        return out * (route.keep.astype(y.dtype) * weights)[:, None]
 
 
 # ----------------------------------------------------------------------

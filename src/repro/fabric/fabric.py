@@ -37,10 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import checkify
 
+from repro.core import arbiter
 from repro.core.arbiter import DispatchPlan
 from repro.core.registers import CrossbarRegisters
 from repro.fabric import sanitize
 from repro.fabric.backends import get_backend
+from repro.fabric.cache import PlanCache, plan_key
 
 ApplyFn = Callable[[jax.Array], jax.Array]
 
@@ -111,19 +113,41 @@ class Fabric:
         additionally need ``check_rep=False``).  Env-sourced debug skips
         in-trace checks so exporting the variable cannot break programs
         that never opted in.
+    plan_cache:
+        The steady-state fast path (``repro.fabric.cache``): ``True`` (a
+        default-sized LRU), an int (LRU size), or ``False``/``None`` (off
+        — the default).  When on, host-level ``plan``/``dispatch``/
+        ``combine``/``transfer`` calls against the *bound* register file
+        memoize their ``DispatchPlan`` and scatter address vectors per
+        ``(register_epoch, offered-bytes)`` key; the epoch counter
+        ``Shell.post`` maintains invalidates everything automatically, so
+        a cached result is always from the current routing table.  Cached
+        paths are bit-identical to uncached ones (the plan-equivalence
+        suite pins this) and hit/miss/invalidation counters flow through
+        ``probe()`` into ``Signals``.  Calls made inside a trace or with
+        a ``registers=`` override always bypass the cache.
     """
 
     def __init__(self, registers, *, backend: Union[str, Any] = "reference",
                  capacity: Optional[int] = None,
-                 debug: Optional[Union[bool, str]] = None, **backend_kw):
+                 debug: Optional[Union[bool, str]] = None,
+                 plan_cache: Union[bool, int, None] = False, **backend_kw):
         if isinstance(registers, CrossbarRegisters):
             regs0 = registers
             self._regs_fn = lambda: regs0
+            self._epoch_fn = lambda: int(regs0.version)
         elif hasattr(registers, "registers"):
             # duck-typed Shell: live property, re-read on every call
             self._regs_fn = lambda: registers.registers
+            # The shell already tracks the epoch as a host value; fall back
+            # to reading the register file's version counter.
+            if hasattr(registers, "epoch"):
+                self._epoch_fn = lambda: int(registers.epoch)
+            else:
+                self._epoch_fn = lambda: int(self._regs_fn().version)
         elif callable(registers):
             self._regs_fn = registers
+            self._epoch_fn = lambda: int(self._regs_fn().version)
         else:
             raise TypeError(f"cannot bind fabric to {type(registers)!r}")
         self.backend = get_backend(backend, **backend_kw)
@@ -152,6 +176,32 @@ class Fabric:
         self._jit_combine = jax.jit(self._combine_impl)
         self._jit_transfer = jax.jit(self._transfer_impl,
                                      static_argnames=("apply_fn",))
+        # ---- steady-state plan cache (repro.fabric.cache) --------------
+        # The cached-path programs trace once each on first use and are
+        # counted under their own keys; like every other entry point they
+        # must never RE-trace across reconfigurations (the register file
+        # stays a traced argument on the cached paths too).
+        self._shared_scatter = bool(getattr(self.backend,
+                                            "uses_shared_scatter", False))
+        if plan_cache:
+            size = 128 if plan_cache is True else int(plan_cache)
+            self.plan_cache: Optional[PlanCache] = PlanCache(maxsize=size)
+            self._trace_counts.update(addrs=0, dispatch_cached=0,
+                                      combine_cached=0, transfer_cached=0)
+            self._jit_addrs = jax.jit(self._addrs_impl)
+            self._jit_dispatch_cached = jax.jit(self._dispatch_cached_impl)
+            self._jit_combine_cached = jax.jit(self._combine_cached_impl)
+            self._jit_transfer_cached = jax.jit(
+                self._transfer_cached_impl, static_argnames=("apply_fn",))
+            if self.debug:
+                dbg = dict(debug=self.debug)
+                self._chk_dispatch_cached = jax.jit(checkify.checkify(
+                    functools.partial(self._dispatch_cached_impl, **dbg)))
+                self._chk_combine_cached = jax.jit(checkify.checkify(
+                    functools.partial(self._combine_cached_impl, **dbg)))
+                self._chk_transfer_cached_cache = {}
+        else:
+            self.plan_cache = None
         if self.debug:
             dbg = dict(debug=self.debug)
             # In-trace entry points with bare checks: the enclosing program
@@ -183,7 +233,7 @@ class Fabric:
 
     @property
     def epoch(self) -> int:
-        return int(self.registers.version)
+        return self._epoch_fn()
 
     @property
     def n_ports(self) -> int:
@@ -206,6 +256,22 @@ class Fabric:
         from repro.manager.telemetry import FabricProbe
         return FabricProbe(self)
 
+    def reset_accounting(self) -> None:
+        """Zero every cumulative traffic counter (and the plan cache's
+        hit/miss/invalidation stats — entries stay warm) so a new
+        measurement window starts clean.  ``ElasticServer.reset`` calls
+        this; a fabric shared across scenarios must not leak one run's
+        ``port_traffic`` into the next run's first ``Signals`` window."""
+        self.port_traffic = np.zeros_like(self.port_traffic)
+        self.remote_port_traffic = np.zeros_like(self.remote_port_traffic)
+        self.local_port_traffic = np.zeros_like(self.local_port_traffic)
+        self.offered_packets = 0
+        self.granted_packets = 0
+        self.remote_packets = 0
+        self.local_packets = 0
+        if self.plan_cache is not None:
+            self.plan_cache.reset_stats()
+
     def account(self, plan, *, src_shard: Optional[int] = None,
                 n_shards: Optional[int] = None) -> None:
         """Fold one concrete ``DispatchPlan`` into the cumulative traffic
@@ -220,7 +286,24 @@ class Fabric:
         ICI bandwidth), each with a per-port vector
         (``local_port_traffic`` / ``remote_port_traffic``); the manager's
         ``Signals`` surfaces all of them.
+
+        Plans handed back by the plan cache take a device-free fast path:
+        the counts/offered/granted triple is pulled to the host once per
+        entry and replayed as numpy scalars on every later tick.
         """
+        cache = self.plan_cache
+        if cache is not None and src_shard is None:
+            entry = cache.entry_for_plan(self.epoch, plan)
+            if entry is not None:
+                if entry.acct is None:
+                    entry.acct = (np.asarray(plan.counts, np.int64),
+                                  int((np.asarray(plan.dst) >= 0).sum()),
+                                  int(np.asarray(plan.keep).sum()))
+                counts, offered, granted = entry.acct
+                self._add_counts(counts)
+                self.offered_packets += offered
+                self.granted_packets += granted
+                return
         self._add_counts(plan.counts)
         dst = np.asarray(plan.dst)
         keep = np.asarray(plan.keep)
@@ -330,6 +413,118 @@ class Fabric:
             sanitize.check_slabs(y, debug)
         return self.backend.combine(y, plan, weights), plan
 
+    # ---- cached-path impls (plan + addresses are traced arguments) -----
+    # The plan cache only kicks in at host level against the bound
+    # register file, so these run with a concrete memoized plan; the
+    # registers still flow in traced — reconfigurations that do NOT bump
+    # the epoch (impossible via Shell.post, but the contract holds) would
+    # still re-route values without retracing.
+    def _addrs_impl(self, plan):
+        self._trace_counts["addrs"] += 1     # python: counts traces only
+        n = plan.counts.shape[0]
+        daddr = arbiter.flat_slot_addr(plan, n, self.capacity)
+        caddr, cmask = arbiter.combine_addr(plan, n, self.capacity)
+        return daddr, caddr, cmask
+
+    def _dispatch_cached_impl(self, regs, x, plan, src, daddr, *,
+                              debug=False):
+        self._trace_counts["dispatch_cached"] += 1
+        gated = self._gated(regs)
+        if self._shared_scatter:
+            slabs = arbiter.dispatch_at(x, daddr, plan.counts.shape[0],
+                                        self.capacity)
+        else:
+            slabs = self.backend.dispatch(x, plan, regs, self.capacity)
+        if debug:
+            sanitize.check_plan(plan, gated, src, self.backend, debug)
+            sanitize.check_slabs(slabs, debug)
+        return slabs, plan
+
+    def _combine_cached_impl(self, regs, y, plan, caddr, cmask, weights, *,
+                             debug=False):
+        self._trace_counts["combine_cached"] += 1
+        if debug:
+            sanitize.check_combine(plan, y.shape[-2], debug)
+        fast = (self._shared_scatter
+                and tuple(y.shape[:2]) == (plan.counts.shape[0],
+                                           self.capacity))
+        if fast:
+            return arbiter.combine_at(y, caddr, cmask, weights)
+        return self.backend.combine(y, plan, weights)
+
+    def _transfer_cached_impl(self, regs, x, plan, src, daddr, caddr,
+                              cmask, weights, *, apply_fn, debug=False):
+        self._trace_counts["transfer_cached"] += 1
+        gated = self._gated(regs)
+        n = plan.counts.shape[0]
+        if self._shared_scatter:
+            slabs = arbiter.dispatch_at(x, daddr, n, self.capacity)
+        else:
+            slabs = self.backend.dispatch(x, plan, gated, self.capacity)
+        if debug:
+            sanitize.check_plan(plan, gated, src, self.backend, debug)
+            sanitize.check_slabs(slabs, debug)
+        y = slabs if apply_fn is None else apply_fn(slabs)
+        if debug:
+            sanitize.check_slabs(y, debug)
+        fast = (self._shared_scatter
+                and tuple(y.shape[:2]) == (n, self.capacity))
+        if fast:
+            out = arbiter.combine_at(y, caddr, cmask, weights)
+        else:
+            out = self.backend.combine(y, plan, weights)
+        return out, plan
+
+    # ---- cache plumbing (host-side; never consulted inside a trace) ----
+    def _cache_lookup(self, dst, src, registers):
+        """The live entry for this offer, or None (cache off, an explicit
+        ``registers=`` override — the epoch key only speaks for the bound
+        file — or traced inputs)."""
+        cache = self.plan_cache
+        if cache is None or registers is not None:
+            return None
+        if isinstance(dst, jax.core.Tracer) or \
+                isinstance(src, jax.core.Tracer):
+            return None
+        return cache.lookup(self.epoch, plan_key(dst, src))
+
+    def _cache_store(self, dst, src, registers, new_plan) -> None:
+        cache = self.plan_cache
+        if cache is None or registers is not None:
+            return
+        if isinstance(dst, jax.core.Tracer) or \
+                isinstance(src, jax.core.Tracer):
+            return
+        cache.store(self.epoch, plan_key(dst, src), new_plan,
+                    jnp.asarray(src))
+
+    def _cache_entry_for(self, plan_obj, registers, y):
+        cache = self.plan_cache
+        if cache is None or registers is not None:
+            return None
+        if isinstance(y, jax.core.Tracer):
+            return None
+        return cache.entry_for_plan(self.epoch, plan_obj)
+
+    def _cache_addrs(self, entry):
+        """Fill the entry's memoized scatter/gather address vectors on
+        first data-plane use (plan-only workloads never pay for them)."""
+        if entry.daddr is None:
+            entry.daddr, entry.caddr, entry.cmask = \
+                self._jit_addrs(entry.plan)
+        return entry
+
+    def _chk_transfer_cached(self, apply_fn):
+        """Checkified cached transfer, per ``apply_fn`` (see
+        :meth:`_chk_transfer`)."""
+        fn = self._chk_transfer_cached_cache.get(apply_fn)
+        if fn is None:
+            fn = jax.jit(checkify.checkify(functools.partial(
+                self._transfer_cached_impl, apply_fn=apply_fn,
+                debug=self.debug)))
+            self._chk_transfer_cached_cache[apply_fn] = fn
+        return fn
+
     # ---- debug routing -------------------------------------------------
     def _debug_call(self, kind, chk_fn, dbg_fn, plain_fn, *args):
         """Pick the checked variant for a debug-mode call.  Host-level
@@ -372,12 +567,18 @@ class Fabric:
         >>> int(plan.keep.sum())        # second packet to port 2 over quota
         2
         """
+        entry = self._cache_lookup(dst, src, registers)
+        if entry is not None:
+            return entry.plan
         regs = self.registers if registers is None else registers
         if self.debug:
-            return self._debug_call("plan", self._chk_plan,
-                                    self._jit_plan_dbg, self._jit_plan,
-                                    regs, dst, src)
-        return self._jit_plan(regs, dst, src)
+            out = self._debug_call("plan", self._chk_plan,
+                                   self._jit_plan_dbg, self._jit_plan,
+                                   regs, dst, src)
+        else:
+            out = self._jit_plan(regs, dst, src)
+        self._cache_store(dst, src, registers, out)
+        return out
 
     def dispatch(self, x: jax.Array, dst: jax.Array, src: jax.Array, *,
                  registers: Optional[CrossbarRegisters] = None
@@ -387,11 +588,27 @@ class Fabric:
         [ports_per_shard, C, D] block for the sharded backend.  Dropped
         packets land nowhere; their error codes are in the returned plan."""
         regs = self.registers if registers is None else registers
+        entry = self._cache_lookup(dst, src, registers)
+        if entry is not None:
+            self._cache_addrs(entry)
+            if self.debug:
+                err, out = self._chk_dispatch_cached(
+                    regs, x, entry.plan, entry.src, entry.daddr)
+                err.throw()
+            else:
+                out = self._jit_dispatch_cached(regs, x, entry.plan,
+                                                entry.src, entry.daddr)
+            # Hand back the memoized plan OBJECT (values are identical):
+            # combine/account recognise it by identity and stay device-free.
+            return out[0], entry.plan
         if self.debug:
-            return self._debug_call("dispatch", self._chk_dispatch,
-                                    self._jit_dispatch_dbg,
-                                    self._jit_dispatch, regs, x, dst, src)
-        return self._jit_dispatch(regs, x, dst, src)
+            out = self._debug_call("dispatch", self._chk_dispatch,
+                                   self._jit_dispatch_dbg,
+                                   self._jit_dispatch, regs, x, dst, src)
+        else:
+            out = self._jit_dispatch(regs, x, dst, src)
+        self._cache_store(dst, src, registers, out[1])
+        return out
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
                 weights: Optional[jax.Array] = None, *,
@@ -402,6 +619,17 @@ class Fabric:
         if weights is None:
             weights = jnp.ones(plan.keep.shape, y.dtype)
         regs = self.registers if registers is None else registers
+        entry = self._cache_entry_for(plan, registers, y)
+        if entry is not None:
+            self._cache_addrs(entry)
+            if self.debug:
+                err, out = self._chk_combine_cached(
+                    regs, y, entry.plan, entry.caddr, entry.cmask, weights)
+                err.throw()
+                return out
+            return self._jit_combine_cached(regs, y, entry.plan,
+                                            entry.caddr, entry.cmask,
+                                            weights)
         if self.debug:
             return self._debug_call("combine", self._chk_combine,
                                     self._jit_combine_dbg,
@@ -433,14 +661,30 @@ class Fabric:
         if weights is None:
             weights = jnp.ones(dst.shape, x.dtype)
         regs = self.registers if registers is None else registers
+        entry = self._cache_lookup(dst, src, registers)
+        if entry is not None:
+            self._cache_addrs(entry)
+            if self.debug:
+                err, out = self._chk_transfer_cached(apply_fn)(
+                    regs, x, entry.plan, entry.src, entry.daddr,
+                    entry.caddr, entry.cmask, weights)
+                err.throw()
+            else:
+                out = self._jit_transfer_cached(
+                    regs, x, entry.plan, entry.src, entry.daddr,
+                    entry.caddr, entry.cmask, weights, apply_fn=apply_fn)
+            return out[0], entry.plan       # identity-stable plan object
         if self.debug:
-            return self._debug_call(
+            out = self._debug_call(
                 "transfer", self._chk_transfer(apply_fn),
                 functools.partial(self._jit_transfer_dbg, apply_fn=apply_fn),
                 functools.partial(self._jit_transfer, apply_fn=apply_fn),
                 regs, x, dst, src, weights)
-        return self._jit_transfer(regs, x, dst, src, weights,
-                                  apply_fn=apply_fn)
+        else:
+            out = self._jit_transfer(regs, x, dst, src, weights,
+                                     apply_fn=apply_fn)
+        self._cache_store(dst, src, registers, out[1])
+        return out
 
     def _chk_transfer(self, apply_fn):
         """Checkified host-level transfer, cached per ``apply_fn`` (the

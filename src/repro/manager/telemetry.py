@@ -18,6 +18,9 @@ channel                 value
 ``queue_wait``          ``{app_id: mean ticks the queued requests waited}``
 ``active``              ``{app_id: decode slots currently serving it}``
 ``admission_wait``      ``{app_id: mean submit->admit ticks, this window}``
+``admission_p50``       ``{app_id: p50 submit->admit ticks, this window}``
+``admission_p99``       ``{app_id: p99 submit->admit ticks, this window}``
+                        (the percentiles serving SLO policies gate on)
 ``port_traffic``        cumulative per-port grant counts (int sequence)
 ``offered_packets``     cumulative packets offered to the fabric (int)
 ``granted_packets``     cumulative packets granted (int)
@@ -29,6 +32,9 @@ channel                 value
                         (int sequence)
 ``straggler_score``     ``{region: EWMA / fleet median}``
 ``fabric_traces``       cumulative XLA retrace count (int)
+``plan_cache_hits``     cumulative fabric plan-cache hits (int)
+``plan_cache_misses``   cumulative fabric plan-cache misses (int)
+``plan_cache_invalidations``  cumulative epoch flushes of live entries
 ======================  ================================================
 
 Dict channels merge across probes (per-key update), scalar/array channels
@@ -46,8 +52,10 @@ The built-in probes wrap the existing subsystems (each also reachable as
 from __future__ import annotations
 
 import dataclasses
-from typing import (Any, Dict, Mapping, Optional, Protocol, Sequence, Tuple,
-                    runtime_checkable)
+from typing import (Any, Dict, List, Mapping, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
 
 from repro.shell.state import ON_SERVER, PoolState
 
@@ -83,6 +91,8 @@ class TenantSignals:
     active: int = 0             # decode slots currently serving this app
     queue_wait: float = 0.0     # mean ticks its queued requests have waited
     admission_wait: float = 0.0  # mean submit->admit ticks, this window
+    admission_p50: float = 0.0   # median submit->admit ticks, this window
+    admission_p99: float = 0.0   # tail submit->admit ticks, this window
 
     @property
     def starved(self) -> bool:
@@ -121,6 +131,15 @@ class Signals:
     local_port_traffic: Tuple[int, ...] = ()
     remote_port_traffic_delta: Tuple[int, ...] = ()
     local_port_traffic_delta: Tuple[int, ...] = ()
+    # fabric plan cache (the steady-state decode fast path): cumulative
+    # counters plus per-window deltas — a policy can read hit-rate *and*
+    # see reconfiguration churn as invalidation spikes
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_cache_invalidations: int = 0
+    plan_cache_hits_delta: int = 0
+    plan_cache_misses_delta: int = 0
+    plan_cache_invalidations_delta: int = 0
     # fault-tolerance
     straggler_score: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
@@ -160,6 +179,15 @@ class Signals:
         total = self.remote_traffic_delta + self.local_traffic_delta
         return self.remote_traffic_delta / total if total > 0 else 0.0
 
+    @property
+    def plan_cache_hit_rate(self) -> float:
+        """This window's fabric plan-cache hit rate (0.0 when no cached
+        fabric reported) — near 1.0 in steady state, dipping exactly when
+        reconfigurations invalidate (the slow-path/fast-path split made
+        visible to policies)."""
+        total = self.plan_cache_hits_delta + self.plan_cache_misses_delta
+        return self.plan_cache_hits_delta / total if total > 0 else 0.0
+
 
 # ----------------------------------------------------------------------
 # built-in probes
@@ -194,28 +222,34 @@ class ServerProbe:
             if slot is not None:
                 app = slot.request.app_id
                 active[app] = active.get(app, 0) + 1
-        admission: Dict[int, float] = {}
-        counts: Dict[int, int] = {}
+        waits: Dict[int, List[int]] = {}
         fresh = srv.completions[self._completions_seen:]
         self._completions_seen = len(srv.completions)
         for c in fresh:
             if c.submitted_tick < 0:
                 continue
-            admission[c.app_id] = (admission.get(c.app_id, 0.0)
-                                   + (c.admitted_tick - c.submitted_tick))
-            counts[c.app_id] = counts.get(c.app_id, 0) + 1
-        for app, total in admission.items():
-            admission[app] = total / counts[app]
-        return {
+            waits.setdefault(c.app_id, []).append(
+                c.admitted_tick - c.submitted_tick)
+        admission = {app: sum(w) / len(w) for app, w in waits.items()}
+        adm_p50 = {app: float(np.percentile(w, 50))
+                   for app, w in waits.items()}
+        adm_p99 = {app: float(np.percentile(w, 99))
+                   for app, w in waits.items()}
+        ch: Dict[str, Any] = {
             "queue_depth": depth,
             "queue_wait": wait,
             "active": active,
             "admission_wait": admission,
+            "admission_p50": adm_p50,
+            "admission_p99": adm_p99,
             "port_traffic": tuple(int(v) for v in srv.port_traffic),
             "offered_packets": int(srv.offered_packets),
             "granted_packets": int(srv.granted_packets),
             "fabric_traces": int(srv.fabric.trace_count),
         }
+        if getattr(srv.fabric, "plan_cache", None) is not None:
+            ch.update(srv.fabric.plan_cache.stats())
+        return ch
 
 
 class StragglerProbe:
@@ -258,6 +292,8 @@ class FabricProbe:
                 int(v) for v in f.remote_port_traffic)
             ch["local_port_traffic"] = tuple(
                 int(v) for v in f.local_port_traffic)
+        if getattr(f, "plan_cache", None) is not None:
+            ch.update(f.plan_cache.stats())
         return ch
 
 
@@ -311,6 +347,8 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
     wait = ch.get("queue_wait", {})
     active = ch.get("active", {})
     admission = ch.get("admission_wait", {})
+    adm_p50 = ch.get("admission_p50", {})
+    adm_p99 = ch.get("admission_p99", {})
     tenants = tuple(
         TenantSignals(
             name=t.name, app_id=t.app_id,
@@ -318,7 +356,9 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
             queue_depth=int(depth.get(t.app_id, 0)),
             active=int(active.get(t.app_id, 0)),
             queue_wait=float(wait.get(t.app_id, 0.0)),
-            admission_wait=float(admission.get(t.app_id, 0.0)))
+            admission_wait=float(admission.get(t.app_id, 0.0)),
+            admission_p50=float(adm_p50.get(t.app_id, 0.0)),
+            admission_p99=float(adm_p99.get(t.app_id, 0.0)))
         for t in sorted(state.tenants, key=lambda t: t.name))
 
     def vec_delta(cur, prev_vec):
@@ -342,6 +382,14 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
     local = int(ch.get("local_packets", 0))
     d_remote = remote - (prev.remote_traffic if prev is not None else 0)
     d_local = local - (prev.local_traffic if prev is not None else 0)
+    pc_hits = int(ch.get("plan_cache_hits", 0))
+    pc_misses = int(ch.get("plan_cache_misses", 0))
+    pc_inval = int(ch.get("plan_cache_invalidations", 0))
+    d_pc_hits = pc_hits - (prev.plan_cache_hits if prev is not None else 0)
+    d_pc_misses = pc_misses - (prev.plan_cache_misses
+                               if prev is not None else 0)
+    d_pc_inval = pc_inval - (prev.plan_cache_invalidations
+                             if prev is not None else 0)
 
     healthy = [r for r in state.regions if r.healthy]
     return Signals(
@@ -359,4 +407,9 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
         remote_port_traffic=remote_ports, local_port_traffic=local_ports,
         remote_port_traffic_delta=remote_ports_delta,
         local_port_traffic_delta=local_ports_delta,
+        plan_cache_hits=pc_hits, plan_cache_misses=pc_misses,
+        plan_cache_invalidations=pc_inval,
+        plan_cache_hits_delta=d_pc_hits,
+        plan_cache_misses_delta=d_pc_misses,
+        plan_cache_invalidations_delta=d_pc_inval,
         straggler_score=dict(ch.get("straggler_score", {})))

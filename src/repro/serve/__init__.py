@@ -1,0 +1,23 @@
+"""``repro.serve`` — seeded serving workloads over the elastic stack.
+
+The control plane (``repro.shell``), data plane (``repro.fabric``) and
+manager (``repro.manager``) assemble into a serving system; this package
+is the load side: deterministic engines, seeded arrival schedules (front-
+loaded and heavy-tailed), mid-run reconfiguration scripts, and a harness
+that folds a run into one :class:`~repro.serve.harness.ServeReport` —
+tick-latency percentiles, admission percentiles, tokens/s, plan-cache
+counters, and a completion digest for bit-identity checks.
+
+``benchmarks/serve_bench.py`` builds its steady-state and
+reconfiguration-storm rows from exactly these pieces; tests drive the same
+harness at smaller scale.
+"""
+from repro.serve.harness import (ReconfigEvent, SeededEngine,  # noqa: F401
+                                 ServeHarness, ServeReport, StreamSpec,
+                                 front_loaded_arrivals,
+                                 heavy_tailed_arrivals)
+
+__all__ = [
+    "SeededEngine", "StreamSpec", "ReconfigEvent", "ServeHarness",
+    "ServeReport", "front_loaded_arrivals", "heavy_tailed_arrivals",
+]

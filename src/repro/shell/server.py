@@ -31,7 +31,9 @@ Engines are pluggable: ``register_model`` builds a real jitted model engine;
 tests inject lightweight fakes via ``register_engine`` (anything with
 ``prefill(prompt) -> (tok, state)`` and ``decode(tok, state) ->
 (next_tok, state)``; an optional ``prefill_batch(prompts) -> [(tok,
-state), ...]`` opts into fused admission).
+state), ...]`` opts into fused admission, and an optional
+``decode_batch(toks, states) -> (toks, states)`` opts into fused
+per-tick decode across slots — elementwise-identical to the loop).
 """
 from __future__ import annotations
 
@@ -183,8 +185,11 @@ class ModelEngine:
         return self._greedy(logits)[0], state
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Slot:
+    # ``slots=True``: the steady-state decode loop touches every field of
+    # every active slot every tick — dict-less attribute access is a
+    # measurable share of the tick at thousands of slots.
     request: StreamRequest
     entry_port: int
     admitted_tick: int
@@ -206,10 +211,17 @@ class ElasticServer:
     """
 
     def __init__(self, shell: Shell, *, n_slots: int = 4,
-                 fabric_backend: str = "reference"):
+                 fabric_backend: str = "reference",
+                 plan_cache: bool = True):
         self.shell = shell
         self.n_slots = n_slots
-        self.fabric = shell.fabric(backend=fabric_backend)
+        # Decode ticks between reconfigurations offer byte-identical packet
+        # vectors under an unchanged register epoch, so the fabric's
+        # epoch-keyed plan cache (repro.fabric.cache) is on by default —
+        # the steady-state fast path.  ``Shell.post`` bumps the epoch and
+        # invalidates it; pass ``plan_cache=False`` to always replan.
+        self.fabric = shell.fabric(backend=fabric_backend,
+                                   plan_cache=plan_cache)
         self.queue: Deque[StreamRequest] = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.completions: List[StreamCompletion] = []
@@ -217,6 +229,14 @@ class ElasticServer:
         self._engines: Dict[int, Any] = {}
         self._rid_counter = itertools.count()
         self._stalled = False
+        # Steady-state route memo: the slot->port packet vector only changes
+        # when slot occupancy does (admission / completion), so between those
+        # events each tick reuses the same host arrays — which also keeps
+        # the plan-cache key bytes identical without rebuilding them.
+        self._routes_dirty = True
+        self._dst = np.full(n_slots, -1, np.int32)
+        self._src = np.full(n_slots, -1, np.int32)
+        self._active = 0
 
     # ---- traffic counters (cumulative; reconfigurations re-route, they
     # never reset these — the fabric owns the tally, shared with account())
@@ -250,7 +270,8 @@ class ElasticServer:
     def register_engine(self, app_id: int, engine: Any) -> None:
         """Duck-typed engine injection: anything with ``prefill(prompt) ->
         (tok, state)`` and ``decode(tok, state) -> (tok, state)`` (an
-        optional ``prefill_batch`` opts into fused admission).
+        optional ``prefill_batch`` opts into fused admission; an optional
+        ``decode_batch(toks, states)`` fuses each tick's decode pass).
 
         >>> import numpy as np
         >>> from repro.core.elastic import Region
@@ -286,7 +307,10 @@ class ElasticServer:
 
     @property
     def active_count(self) -> int:
-        return sum(1 for s in self.slots if s is not None)
+        # Maintained counter, not a slot scan: ``step`` reads this every
+        # tick and a scan over thousands of slots would dominate the
+        # steady-state tick (admit +N, completion -1, reset 0).
+        return self._active
 
     @property
     def queued_count(self) -> int:
@@ -295,6 +319,24 @@ class ElasticServer:
     @property
     def idle(self) -> bool:
         return self.active_count == 0 and not self.queue
+
+    def reset(self) -> None:
+        """Return the server to an empty, tick-zero state for the next
+        scenario: queue, slots, completions and the stall latch clear, and
+        the shell-bound fabric's cumulative accounting resets with it —
+        previously a reused server leaked the old run's ``port_traffic``
+        into the next scenario's first ``Signals`` window (the fabric owns
+        those counters, so clearing server state alone was not enough).
+        Engines stay registered; the shell is untouched."""
+        self.queue.clear()
+        self.slots = [None] * self.n_slots
+        self.completions = []
+        self.tick = 0
+        self._stalled = False
+        self._rid_counter = itertools.count()
+        self._routes_dirty = True
+        self._active = 0
+        self.fabric.reset_accounting()
 
     # ---- telemetry ----------------------------------------------------
     def probe(self):
@@ -312,6 +354,8 @@ class ElasticServer:
         prompt-length) group of this tick's admissions, instead of one
         replay per request (engines without ``prefill_batch`` fall back to
         per-request ``prefill``)."""
+        if not self.queue:
+            return 0                # steady state: skip the free-slot scan
         free = [i for i, slot in enumerate(self.slots) if slot is None]
         picked: List[Tuple[int, StreamRequest, int]] = []
         blocked: List[StreamRequest] = []
@@ -344,6 +388,9 @@ class ElasticServer:
                 self.slots[i] = _Slot(request=req, entry_port=port,
                                       admitted_tick=self.tick, state=state,
                                       next_tok=tok)
+        if picked:
+            self._routes_dirty = True
+            self._active += len(picked)
         return len(picked)
 
     def _account_traffic(self) -> None:
@@ -351,14 +398,21 @@ class ElasticServer:
 
         One packet per slot; empty slots carry ``dst = -1`` (the padding
         path) so the packet array shape is static across ticks — the plan
-        never retraces, only register *values* steer the grants."""
-        import jax.numpy as jnp
-        dst = np.full(self.n_slots, -1, np.int32)
-        for i, slot in enumerate(self.slots):
-            if slot is not None:
-                dst[i] = slot.entry_port
-        src = np.full(self.n_slots, self.shell.state.host_port, np.int32)
-        plan = self.fabric.plan(jnp.asarray(dst), jnp.asarray(src))
+        never retraces, only register *values* steer the grants.  The
+        packet vectors go in as host numpy arrays and are memoized between
+        occupancy changes: the fabric's plan cache keys on their bytes
+        directly, so a steady-state tick (same slots, same epoch) is a
+        pure host-side lookup with no device round-trip."""
+        if self._routes_dirty:
+            dst = np.full(self.n_slots, -1, np.int32)
+            for i, slot in enumerate(self.slots):
+                if slot is not None:
+                    dst[i] = slot.entry_port
+            self._dst = dst
+            self._src = np.full(self.n_slots, self.shell.state.host_port,
+                                np.int32)
+            self._routes_dirty = False
+        plan = self.fabric.plan(self._dst, self._src)
         # Padding slots (dst = -1) are dropped by design; only real slots
         # count as offered load, so offered - granted is the true drop
         # tally.  The fabric owns the cumulative counters.
@@ -371,11 +425,17 @@ class ElasticServer:
         # every queued request is waiting on a control-plane event.  Slots
         # that free at the end of this tick don't count — the next tick's
         # admission pass gets first claim on them.
-        self._stalled = (admitted == 0 and self.active_count == 0
-                         and bool(self.queue))
+        self._stalled = (bool(self.queue) and admitted == 0
+                         and self.active_count == 0)
         if self.active_count:
             self._account_traffic()
         finished: List[StreamCompletion] = []
+        # Survivor grouping: per-app slot lists feed the fused decode pass.
+        # With a single registered engine (the high-QPS serving shape) the
+        # grouping collapses to one list append per slot — no dict hop.
+        one_app = len(self._engines) == 1
+        survivors: List[_Slot] = []
+        live: Dict[int, List[_Slot]] = {}
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
@@ -390,10 +450,37 @@ class ElasticServer:
                 self.completions.append(comp)
                 finished.append(comp)
                 self.slots[i] = None            # rotate: free on completion
+                self._routes_dirty = True
+                self._active -= 1
                 continue
-            engine = self._engines[slot.request.app_id]
-            slot.next_tok, slot.state = engine.decode(slot.next_tok,
-                                                      slot.state)
+            if one_app:
+                survivors.append(slot)
+            else:
+                live.setdefault(slot.request.app_id, []).append(slot)
+        if one_app and survivors:
+            live[survivors[0].request.app_id] = survivors
+        # Decode pass: one fused ``decode_batch`` call per engine that
+        # offers it (the steady-state fast path — 1k slots advance in one
+        # call instead of 1k), per-slot ``decode`` otherwise.  Semantics
+        # are the engine's contract: elementwise-identical to the loop.
+        # ``decode_batch`` may return ``None`` for the states to mean
+        # "unchanged / managed in place" — the writeback is skipped.
+        for app_id, slots in live.items():
+            engine = self._engines[app_id]
+            batch_fn = getattr(engine, "decode_batch", None)
+            if batch_fn is not None and len(slots) > 1:
+                toks, states = batch_fn([s.next_tok for s in slots],
+                                        [s.state for s in slots])
+                if states is None:
+                    for slot, tok in zip(slots, toks):
+                        slot.next_tok = tok
+                else:
+                    for slot, tok, state in zip(slots, toks, states):
+                        slot.next_tok, slot.state = tok, state
+            else:
+                for slot in slots:
+                    slot.next_tok, slot.state = engine.decode(slot.next_tok,
+                                                              slot.state)
         self.tick += 1
         return finished
 

@@ -54,6 +54,7 @@ class Shell:
         self.policy = get_policy(policy)
         self.capacity = capacity
         self._regs = full_registers(self._state, capacity=capacity, version=0)
+        self._epoch = int(self._regs.version)
         self.log: List[LogEntry] = []
         self._clock = 0.0
         self._subscribers: List[Subscriber] = []
@@ -85,6 +86,7 @@ class Shell:
         new_state, p = plan_event(self._state, event, self.policy)
         self._state = new_state
         self._regs = apply_delta(self._regs, p.delta)
+        self._epoch = int(self._regs.version)
         self._clock += p.cost_s
         self.log.append(LogEntry(event=event, plan=p,
                                  wall_time=self._clock, epoch=self.epoch))
@@ -109,8 +111,13 @@ class Shell:
 
     @property
     def epoch(self) -> int:
-        """Monotonic count of applied plans (== registers.version)."""
-        return int(self._regs.version)
+        """Monotonic count of applied plans (== registers.version).
+
+        Memoized at ``post`` time as a host int: the fabric's plan cache
+        checks it on *every* call, and reading the on-device
+        ``registers.version`` scalar would cost a device sync per tick.
+        """
+        return self._epoch
 
     @property
     def clock_s(self) -> float:

@@ -1,0 +1,197 @@
+"""``repro.serve``: the seeded serving harness over ``ElasticServer``.
+
+What is pinned here (the serve bench gates the same properties at scale,
+``benchmarks/serve_bench.py``):
+
+- :class:`SeededEngine` streams are pure functions of (seed, prompt), and
+  its fused ``prefill_batch`` / ``decode_batch`` surface agrees with the
+  per-request calls token for token;
+- the arrival generators are deterministic per seed, and the harness
+  drains every scheduled stream, classifying pure-decode ticks as steady;
+- a run with the fabric plan cache ON is sha256-bit-identical to the same
+  run with it OFF — under a quiet schedule and under a reconfiguration
+  storm (FailRegion / heal / Shrink / Grow landing mid-decode), where
+  every post invalidates the cache exactly once and the fabric still
+  never retraces;
+- ``ElasticServer.reset`` returns the server *and its fabric accounting*
+  to a clean window, so back-to-back scenarios reproduce byte-identically;
+- the telemetry loop: ``ServerProbe`` admission p50/p99 and the fabric's
+  plan-cache counters surface in ``assemble_signals`` (per-tenant and
+  as window deltas).
+"""
+import numpy as np
+import pytest
+
+from repro.core.elastic import Region
+from repro.core.module import ModuleFootprint
+from repro.manager.telemetry import assemble_signals
+from repro.serve import (ReconfigEvent, SeededEngine, ServeHarness,
+                         front_loaded_arrivals, heavy_tailed_arrivals)
+from repro.shell import Shell
+from repro.shell.server import ElasticServer
+
+GB = 1 << 30
+
+
+def make_server(*, n_slots=16, plan_cache=True, seed=5, n_regions=4):
+    shell = Shell([Region(rid=i, n_chips=8, hbm_bytes=8 * GB)
+                   for i in range(n_regions)])
+    shell.submit("svc", [ModuleFootprint(GB, 1e9, 4096)] * 2, app_id=0)
+    server = ElasticServer(shell, n_slots=n_slots, plan_cache=plan_cache)
+    server.register_engine(0, SeededEngine(seed=seed))
+    return server
+
+
+# ----------------------------------------------------------------------
+# the seeded engine: determinism + fused-surface agreement
+# ----------------------------------------------------------------------
+class TestSeededEngine:
+    def test_streams_are_pure_functions_of_seed_and_prompt(self):
+        prompt = np.arange(6, dtype=np.int32)
+        a, b = SeededEngine(seed=9), SeededEngine(seed=9)
+        ta, _ = a.prefill(prompt)
+        tb, _ = b.prefill(prompt)
+        assert ta == tb
+        for _ in range(5):
+            ta, _ = a.decode(ta, None)
+            tb, _ = b.decode(tb, None)
+            assert ta == tb
+        t_other, _ = SeededEngine(seed=10).prefill(prompt)
+        assert t_other != ta                    # the seed actually matters
+        assert 0 <= ta < a.vocab
+
+    def test_batch_surface_matches_per_request_calls(self):
+        eng = SeededEngine(seed=3)
+        prompts = [np.arange(4, dtype=np.int32) + i for i in range(7)]
+        single = [eng.prefill(p)[0] for p in prompts]
+        assert [t for t, _ in eng.prefill_batch(prompts)] == single
+        toks, states = eng.decode_batch(single, [None] * len(single))
+        assert states is None                   # stateless: skip writeback
+        assert toks == [eng.decode(t, None)[0] for t in single]
+
+
+# ----------------------------------------------------------------------
+# arrival schedules
+# ----------------------------------------------------------------------
+class TestArrivals:
+    def test_front_loaded_all_land_at_tick_zero(self):
+        a = front_loaded_arrivals(32, seed=1, apps=(0, 1), max_new=5)
+        b = front_loaded_arrivals(32, seed=1, apps=(0, 1), max_new=5)
+        assert all(s.tick == 0 and s.max_new == 5 for s in a)
+        assert [s.app_id for s in a[:4]] == [0, 1, 0, 1]
+        for x, y in zip(a, b):                  # deterministic per seed
+            assert x.tick == y.tick and x.app_id == y.app_id
+            np.testing.assert_array_equal(x.prompt, y.prompt)
+
+    def test_heavy_tailed_is_seeded_and_monotone(self):
+        a = heavy_tailed_arrivals(64, seed=2, mean_gap_ticks=0.5)
+        b = heavy_tailed_arrivals(64, seed=2, mean_gap_ticks=0.5)
+        ticks = [s.tick for s in a]
+        assert ticks == sorted(ticks) and ticks[0] >= 0
+        assert ticks[-1] > 0                    # gaps actually accumulate
+        assert ticks == [s.tick for s in b]
+        assert any(x != y for x, y in
+                   zip(ticks, [s.tick for s in
+                               heavy_tailed_arrivals(64, seed=3,
+                                                     mean_gap_ticks=0.5)]))
+
+
+# ----------------------------------------------------------------------
+# the harness loop
+# ----------------------------------------------------------------------
+class TestServeHarness:
+    def test_drains_every_stream_and_counts_tokens(self):
+        srv = make_server(n_slots=8)
+        report = ServeHarness(
+            srv, front_loaded_arrivals(24, seed=4, max_new=6)).run()
+        assert report.completions == 24
+        assert report.tokens == 24 * 6
+        assert report.n_slots == 8 and report.n_streams == 24
+        assert report.fabric_retraces == 1
+        # 24 streams through 8 slots: admission staggers, so some ticks
+        # admit (not steady) and the lockstep decode ticks in between are
+        assert 0 < report.steady_ticks < report.ticks
+        assert report.plan_cache_hits > 0
+        js = report.to_json()
+        assert js["completions"] == 24 and isinstance(js["wall_s"], float)
+
+    def test_cached_run_is_bit_identical_to_uncached(self):
+        arrivals = front_loaded_arrivals(24, seed=6, max_new=5)
+        on = ServeHarness(make_server(plan_cache=True), arrivals).run()
+        off = ServeHarness(make_server(plan_cache=False), arrivals).run()
+        assert on.token_digest == off.token_digest
+        assert (on.completions, on.tokens) == (off.completions, off.tokens)
+        assert on.plan_cache_hits > 0 and off.plan_cache_hits == 0
+
+    def test_storm_invalidates_once_per_post_and_never_retraces(self):
+        arrivals = heavy_tailed_arrivals(48, seed=7, mean_gap_ticks=0.3)
+        script = lambda: [
+            ReconfigEvent(3, lambda sh: sh.fail_region(2), "fail R2"),
+            ReconfigEvent(6, lambda sh: sh.heal_region(2), "heal R2"),
+            ReconfigEvent(9, lambda sh: sh.shrink("svc", 1), "shrink"),
+            ReconfigEvent(12, lambda sh: sh.grow("svc", 1), "grow"),
+        ]
+        on = ServeHarness(make_server(n_slots=8, plan_cache=True),
+                          arrivals, reconfigs=script()).run()
+        off = ServeHarness(make_server(n_slots=8, plan_cache=False),
+                           arrivals, reconfigs=script()).run()
+        assert on.reconfigs == 4
+        assert on.plan_cache_invalidations == 4   # one flush per post
+        assert on.fabric_retraces == 1            # never a recompile
+        assert on.token_digest == off.token_digest
+        assert on.completions == 48
+        # bursty arrivals through 8 slots back the queue up: the
+        # admission-wait percentiles are the signal the storm measures
+        assert on.admission_p99_ticks >= on.admission_p50_ticks > 0
+
+    def test_reset_gives_a_byte_identical_second_scenario(self):
+        srv = make_server(n_slots=8)
+        arrivals = front_loaded_arrivals(20, seed=8, max_new=4)
+        first = ServeHarness(srv, arrivals).run()
+        traffic_first = srv.port_traffic.copy()
+
+        srv.reset()
+        assert srv.tick == 0 and srv.idle and not srv.completions
+        assert srv.active_count == 0 and srv.queued_count == 0
+        assert not srv.port_traffic.any()         # fabric window cleared
+        assert srv.offered_packets == 0 and srv.granted_packets == 0
+        stats = srv.fabric.plan_cache.stats()
+        assert stats["plan_cache_hits"] == 0      # counters re-windowed
+        assert stats["plan_cache_entries"] > 0    # ... entries stay warm
+
+        second = ServeHarness(srv, arrivals).run()
+        assert second.token_digest == first.token_digest
+        assert second.completions == first.completions
+        np.testing.assert_array_equal(srv.port_traffic, traffic_first)
+
+
+# ----------------------------------------------------------------------
+# telemetry: admission percentiles + cache counters through Signals
+# ----------------------------------------------------------------------
+class TestServeTelemetry:
+    def test_admission_percentiles_and_cache_counters_in_signals(self):
+        srv = make_server(n_slots=4)
+        probe = srv.probe()
+        ServeHarness(srv, front_loaded_arrivals(16, seed=9, max_new=4)).run()
+
+        sig = assemble_signals(srv.shell, [probe], tick=0)
+        (tenant,) = sig.tenants
+        assert tenant.name == "svc"
+        # 16 streams through 4 slots: most waited, the p99 waited longest
+        assert tenant.admission_p99 >= tenant.admission_p50 > 0
+        assert sig.plan_cache_hits > 0
+        assert sig.plan_cache_misses > 0
+        assert sig.plan_cache_invalidations == 0
+        assert sig.plan_cache_hits_delta == sig.plan_cache_hits
+        assert 0 < sig.plan_cache_hit_rate <= 1
+        assert sig.fabric_traces == 1
+
+        # next window: a reconfiguration flushes the cache exactly once
+        # and the delta fields isolate it from the cumulative counters
+        srv.shell.fail_region(1)
+        ServeHarness(srv, front_loaded_arrivals(8, seed=10, max_new=3)).run()
+        sig2 = assemble_signals(srv.shell, [probe], tick=1, prev=sig)
+        assert sig2.plan_cache_invalidations_delta == 1
+        assert sig2.plan_cache_hits_delta == (sig2.plan_cache_hits
+                                              - sig.plan_cache_hits) > 0
+        assert sig2.fabric_traces == 1

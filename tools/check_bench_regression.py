@@ -28,6 +28,12 @@ the fresh file only, so machine speed is irrelevant — that an explicit
 ``Fabric(..., debug=False)`` costs at most ``--debug-guard-max-ratio``
 of a plain fabric's transfer and stays bit-identical to it: the checkify
 sanitizer layer (docs/invariants.md) must be free when off.
+
+``--serve-json BENCH_serve.json`` gates the serving trajectory the same
+within-file way (machine-neutral by construction): the steady-state
+cached/uncached decode-tick ratio must stay <= ``--serve-max-ratio``,
+cached and uncached completion digests must match in both scenarios,
+and the reconfiguration storm must keep ``fabric_retraces`` at 1.
 """
 from __future__ import annotations
 
@@ -87,6 +93,53 @@ def check_debug_off_guard(fresh: Path, max_ratio: float) -> list[str]:
     return failures
 
 
+def check_serve(serve_json: Path, max_ratio: float) -> list[str]:
+    """Gate the serve trajectory within one file (machine-neutral).
+
+    - ``steady_state_ratio`` rows: cached/uncached decode tick <=
+      ``max_ratio`` and bit-identical completion digests;
+    - ``storm_identity`` rows: bit-identical digests and exactly one
+      fabric trace across every mid-run reconfiguration.
+    Returns failure tags; a file with none of these rows fails too — the
+    bench not producing its gated rows is itself a regression."""
+    failures = []
+    rows = json.loads(serve_json.read_text()).get("rows", [])
+    gated = 0
+    for row in rows:
+        mode = row.get("mode")
+        if mode == "steady_state_ratio":
+            gated += 1
+            ratio = float(row.get("cached_over_uncached", float("inf")))
+            identical = bool(row.get("bit_identical", False))
+            verdict = "ok"
+            if ratio > max_ratio:
+                verdict = "FAIL (cache too slow)"
+                failures.append("serve steady_state_ratio")
+            if not identical:
+                verdict = "FAIL (outputs differ)"
+                failures.append("serve steady_state bit-identity")
+            print(f"  serve steady_state: cached/uncached decode tick "
+                  f"{ratio:.3f}x (max {max_ratio}), "
+                  f"bit_identical={identical} {verdict}")
+        elif mode == "storm_identity":
+            gated += 1
+            identical = bool(row.get("bit_identical", False))
+            retraces = int(row.get("fabric_retraces", -1))
+            verdict = "ok"
+            if not identical:
+                verdict = "FAIL (outputs differ)"
+                failures.append("serve storm bit-identity")
+            if retraces != 1:
+                verdict = "FAIL (retraced)"
+                failures.append("serve storm retraces")
+            print(f"  serve storm: bit_identical={identical}, "
+                  f"fabric_retraces={retraces} {verdict}")
+    if gated == 0:
+        print(f"  serve: no gated rows in {serve_json} FAIL")
+        failures.append("serve rows missing")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("committed", type=Path,
@@ -105,6 +158,12 @@ def main(argv=None) -> int:
     ap.add_argument("--debug-guard-max-ratio", type=float, default=1.25,
                     help="fail if debug=False costs more than this times "
                          "a plain fabric (fresh-file debug_off_guard rows)")
+    ap.add_argument("--serve-json", type=Path, default=None,
+                    help="also gate a fresh BENCH_serve.json within-file: "
+                         "cached decode tick, bit-identity, storm retraces")
+    ap.add_argument("--serve-max-ratio", type=float, default=0.75,
+                    help="fail if the cached steady-state decode tick "
+                         "exceeds this fraction of the uncached tick")
     args = ap.parse_args(argv)
 
     baseline = args.baseline if args.mode == "relative" else None
@@ -112,8 +171,11 @@ def main(argv=None) -> int:
     fresh_keys = set(load_rows(args.fresh, args.backend))
     if not committed_keys:
         print(f"no '{args.backend}' rows in {args.committed}; nothing to gate")
-        return 1 if check_debug_off_guard(
-            args.fresh, args.debug_guard_max_ratio) else 0
+        failures = check_debug_off_guard(args.fresh,
+                                         args.debug_guard_max_ratio)
+        if args.serve_json is not None:
+            failures += check_serve(args.serve_json, args.serve_max_ratio)
+        return 1 if failures else 0
 
     unit = (f"{args.metric} vs {args.baseline}" if baseline
             else args.metric)
@@ -141,6 +203,8 @@ def main(argv=None) -> int:
 
     failures += check_debug_off_guard(args.fresh,
                                       args.debug_guard_max_ratio)
+    if args.serve_json is not None:
+        failures += check_serve(args.serve_json, args.serve_max_ratio)
 
     if failures:
         print(f"perf regression: {unit} exceeded "
