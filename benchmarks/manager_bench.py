@@ -1,16 +1,37 @@
 """Closed-loop autoscaling trajectory bench for ``repro.manager``.
 
-Runs the seeded scenario harness (bursty / churn / failure_storm) under the
-default Hysteresis + TrafficAwareDefrag chain and a FairShare run, and
-reports *counting* metrics only — completions, event mix, peak queue,
-rejected posts, fabric retraces — never wall time.  Every number is a pure
-function of the seed, so ``BENCH_manager.json`` (written by
-``benchmarks/run.py``) is byte-stable across machines and diffs cleanly
-per PR: a policy change shows up as a changed event mix, a retrace
-regression as ``fabric_retraces > 1``.
+Runs the seeded scenario harness under the reactive policies
+(Hysteresis + TrafficAwareDefrag chain, FairShare) and the predictive
+``PredictiveSLO`` chain, and reports *counting* metrics only —
+completions, event mix, peak queue, rejected posts, fabric retraces, SLO
+violation ticks — never wall time.  Every number is a pure function of
+the seed, so ``BENCH_manager.json`` (written by ``benchmarks/run.py``)
+is byte-stable across machines and diffs cleanly per PR: a policy change
+shows up as a changed event mix, a retrace regression as
+``fabric_retraces > 1``, a forecasting regression as
+``forecastable_violations > 0``.
+
+Row kinds:
+
+- plain scenario rows (``RUNS``) — the original reactive trajectories,
+  plus a multi-server ``production`` run (hundreds of tenants, heavy-
+  tailed schedule, 4 frontends over one shell).
+- ``mode="slo_compare"`` rows (``SLO_RUNS``) — reactive vs predictive on
+  the same seeded grant-coupled scenario.  Gated by
+  ``tools/check_bench_regression.py --manager-json``: the predictive run
+  must leave zero forecastable violations and strictly fewer violation
+  ticks than the reactive baseline (when the baseline has any).
+- one ``mode="trace_replay"`` row — records a churn workload to
+  ``benchmarks/manager_trace.jsonl`` (the CI artifact), replays it, and
+  reports whether the two result JSONs are bit-identical.
+
+``bench_manager(mode="predictive")`` runs only the gated predictive rows
+— the fast CI smoke.
 """
 from __future__ import annotations
 
+import json
+from pathlib import Path
 from typing import Dict, List, Tuple
 
 # CI smoke runs this; keep the grid small and the ticks short.
@@ -21,16 +42,93 @@ RUNS = [
     ("churn", "fair_share", 1, 48),
 ]
 
+# Reactive-vs-predictive comparison grid: (kind, seed, ticks).  Seeds are
+# committed: on each, the predictive run beats the reactive baseline
+# (strictly fewer violation ticks) with zero forecastable violations —
+# the property tests in tests/test_forecast.py pin the same seeds.
+SLO_RUNS = [
+    ("diurnal", 0, 96),
+    ("diurnal", 2, 96),
+    ("diurnal", 5, 96),
+    ("bursty", 1, 72),
+    ("bursty", 2, 72),
+    ("bursty", 5, 72),
+]
 
-def bench_manager() -> Tuple[List[dict], Dict[str, str]]:
-    from repro.manager import FairShare, default_policy, run_scenario
+TRACE_ARTIFACT = Path(__file__).resolve().parent / "manager_trace.jsonl"
+
+
+def _slo_compare_rows() -> List[dict]:
+    from repro.manager import (build_spec, default_policy, predictive_policy,
+                               run_scenario)
 
     rows = []
-    for kind, policy_name, seed, ticks in RUNS:
-        policy = (FairShare() if policy_name == "fair_share"
-                  else default_policy())
-        res = run_scenario(kind, seed=seed, ticks=ticks, policy=policy)
-        rows.append({"policy": policy_name, **res.summary()})
+    for kind, seed, ticks in SLO_RUNS:
+        per = {}
+        for policy_name, mk in (("default", default_policy),
+                                ("predictive_slo", predictive_policy)):
+            spec = build_spec(kind, ticks=ticks, seed=seed,
+                              slots_per_region=2)
+            res = run_scenario(spec, seed=seed, ticks=ticks, n_slots=16,
+                               policy=mk())
+            per[policy_name] = res
+        rea, pre = per["default"], per["predictive_slo"]
+        rows.append({
+            "mode": "slo_compare",
+            "scenario": kind, "seed": seed, "ticks": ticks,
+            "slots_per_region": 2,
+            "reactive_violation_ticks": rea.slo_violation_ticks,
+            "reactive_violations": rea.slo_violations,
+            "reactive_forecastable": len(rea.forecastable),
+            "predictive_violation_ticks": pre.slo_violation_ticks,
+            "predictive_violations": pre.slo_violations,
+            "predictive_forecastable": len(pre.forecastable),
+            "reactive_retraces": rea.fabric_retraces,
+            "predictive_retraces": pre.fabric_retraces,
+            "predictive_completions": pre.completions,
+        })
+    return rows
+
+
+def _trace_replay_row() -> dict:
+    from repro.manager import (RecordedWorkload, predictive_policy,
+                               run_scenario)
+
+    a = run_scenario("churn", seed=3, ticks=30,
+                     policy=predictive_policy(),
+                     record_path=TRACE_ARTIFACT)
+    b = run_scenario(RecordedWorkload.load(TRACE_ARTIFACT),
+                     policy=predictive_policy())
+    identical = (json.dumps(a.to_json(), sort_keys=True)
+                 == json.dumps(b.to_json(), sort_keys=True))
+    return {
+        "mode": "trace_replay",
+        "scenario": "churn", "seed": 3, "ticks": 30,
+        "bit_identical": identical,
+        "recorded_rows": len(RecordedWorkload.load(TRACE_ARTIFACT).rows),
+        "record_retraces": a.fabric_retraces,
+        "replay_retraces": b.fabric_retraces,
+        "artifact": TRACE_ARTIFACT.name,
+    }
+
+
+def bench_manager(mode: str = "all") -> Tuple[List[dict], Dict[str, str]]:
+    from repro.manager import FairShare, default_policy, run_scenario
+
+    rows: List[dict] = []
+    if mode == "all":
+        for kind, policy_name, seed, ticks in RUNS:
+            policy = (FairShare() if policy_name == "fair_share"
+                      else default_policy())
+            res = run_scenario(kind, seed=seed, ticks=ticks, policy=policy)
+            rows.append({"policy": policy_name, **res.summary()})
+        res = run_scenario("production", seed=0, ticks=48, n_regions=24,
+                           n_slots=16, n_servers=4,
+                           policy=default_policy())
+        rows.append({"policy": "default", "mode": "production",
+                     **res.summary()})
+    rows += _slo_compare_rows()
+    rows.append(_trace_replay_row())
     claims = {
         "closed_loop": ("every Grow/Shrink/Migrate in these runs was "
                         "posted by the Manager from Signals; the scenario "
@@ -38,5 +136,16 @@ def bench_manager() -> Tuple[List[dict], Dict[str, str]]:
         "deterministic": "seeded rng end-to-end; identical rows per seed",
         "zero_retrace": "fabric_retraces is 1 per run (the initial "
                         "compile) — reconfigurations reuse compiled plans",
+        "predictive_slo": ("slo_compare rows: PredictiveSLO leaves zero "
+                           "forecastable violations and strictly fewer "
+                           "violation ticks than the reactive baseline "
+                           "on the same seed (gated by --manager-json)"),
+        "record_replay": ("trace_replay row: a recorded workload replays "
+                          "to a bit-identical result JSON"),
     }
     return rows, claims
+
+
+def bench_manager_predictive() -> Tuple[List[dict], Dict[str, str]]:
+    """The ``--predictive`` CI smoke: only the gated rows."""
+    return bench_manager(mode="predictive")

@@ -6,6 +6,8 @@ file is gone).
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig5 area  # subset
+    PYTHONPATH=src python -m benchmarks.run manager --predictive
+                           # only the gated predictive-SLO rows (CI smoke)
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ import sys
 from pathlib import Path
 
 from benchmarks.fabric_bench import bench_fabric
-from benchmarks.manager_bench import bench_manager
+from benchmarks.manager_bench import bench_manager, bench_manager_predictive
 from benchmarks.moe_bench import bench_moe
 from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
                                      bench_fig5_elasticity,
@@ -50,7 +52,13 @@ TRAJECTORY_FILES = {"fabric": "BENCH_fabric.json",
 
 
 def main(argv=None) -> int:
-    names = (argv or sys.argv[1:]) or list(BENCHES)
+    args = list(argv if argv is not None else sys.argv[1:])
+    predictive = "--predictive" in args
+    if predictive:
+        args = [a for a in args if a != "--predictive"]
+        BENCHES["manager"] = ("repro.manager — predictive-SLO gated rows "
+                              "only (CI smoke)", bench_manager_predictive)
+    names = args or list(BENCHES)
     results = {}
     failures = []
     for name in names:

@@ -15,19 +15,36 @@ them autonomously:
   victims), ``FairShare`` (weighted max-min region allocation),
   ``PolicyChain`` (composition).
 - ``repro.manager.manager``   — the tick-driven ``Manager`` loop
-  (sample -> decide -> ``shell.post`` -> record).
+  (sample -> decide -> ``shell.post`` -> record), with a demand
+  ``SignalsHistory`` ring and pluggable ``Tracker`` metric sinks.
+- ``repro.manager.forecast``  — the ``Forecaster`` seam (``EWMA`` Holt
+  smoothing, ``Periodic`` seasonal-naive) over per-tenant demand series.
+- ``repro.manager.slo``       — ``SLOTarget`` budgets, violation
+  accounting, and the registered ``PredictiveSLO`` policy that grows
+  *before* forecast demand crosses SLO-feasible capacity.
+- ``repro.manager.trackers``  — metric sinks (``noop`` / ``in_memory`` /
+  ``jsonl``, composable) streaming per-tick control-loop metrics.
 - ``repro.manager.scenarios`` — seeded, deterministic workload scenarios
-  (bursty / diurnal / churn / failure_storm) stepping workload + server +
-  manager together; powers the property tests and ``BENCH_manager.json``.
+  (bursty / diurnal / churn / failure_storm / production) stepping
+  workload + server(s) + manager together; powers the property tests and
+  ``BENCH_manager.json``.
 """
+from repro.manager.forecast import (EWMA, Forecast, Forecaster, Periodic,
+                                    SignalsHistory, forecaster_names,
+                                    get_forecaster, register_forecaster)
 from repro.manager.manager import Decision, Manager
 from repro.manager.policies import (ElasticityPolicy, FairShare, Hysteresis,
                                     PolicyChain, TrafficAwareDefrag,
                                     get_elasticity_policy,
                                     register_elasticity_policy)
+from repro.manager.slo import (PredictiveSLO, SLOTarget,
+                               forecastable_violations, slo_violations)
 from repro.manager.telemetry import (FabricProbe, Probe, ServerProbe,
                                      Signals, StragglerProbe, TenantSignals,
                                      assemble_signals, fragmentation)
+from repro.manager.trackers import (InMemoryTracker, JsonlTracker,
+                                    MultiTracker, NoopTracker, Tracker,
+                                    get_tracker, register_tracker)
 
 __all__ = [
     "Manager", "Decision",
@@ -35,14 +52,22 @@ __all__ = [
     "PolicyChain", "get_elasticity_policy", "register_elasticity_policy",
     "Signals", "TenantSignals", "Probe", "ServerProbe", "StragglerProbe",
     "FabricProbe", "assemble_signals", "fragmentation",
+    "SignalsHistory", "Forecast", "Forecaster", "EWMA", "Periodic",
+    "get_forecaster", "register_forecaster", "forecaster_names",
+    "SLOTarget", "PredictiveSLO", "slo_violations",
+    "forecastable_violations",
+    "Tracker", "NoopTracker", "InMemoryTracker", "JsonlTracker",
+    "MultiTracker", "get_tracker", "register_tracker",
     # lazily resolved (pulls numpy/server machinery): scenario harness
     "run_scenario", "ScenarioResult", "ScenarioSpec", "TenantSpec",
-    "SyntheticEngine", "SCENARIO_KINDS", "default_policy",
+    "SyntheticEngine", "SCENARIO_KINDS", "build_spec", "default_policy",
+    "predictive_policy", "RecordedWorkload", "DEFAULT_SLO",
 ]
 
 _SCENARIO_NAMES = {"run_scenario", "ScenarioResult", "ScenarioSpec",
                    "TenantSpec", "SyntheticEngine", "SCENARIO_KINDS",
-                   "default_policy"}
+                   "build_spec", "default_policy", "predictive_policy",
+                   "RecordedWorkload", "DEFAULT_SLO"}
 
 
 def __getattr__(name):

@@ -27,8 +27,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple, Union
 
+from repro.manager.forecast import SignalsHistory
 from repro.manager.policies import ElasticityPolicy, get_elasticity_policy
+from repro.manager.slo import slo_violations
 from repro.manager.telemetry import Probe, Signals, assemble_signals
+from repro.manager.trackers import Tracker, get_tracker
 from repro.shell import events as ev
 from repro.shell.planner import Plan
 from repro.shell.shell import Shell
@@ -71,11 +74,23 @@ class Manager:
         so each snapshot's deltas span one whole control window).  A
         serving loop calls ``manager.step()`` per server tick while the
         controller runs at this slower cadence; ``tick()`` always decides.
+    history:
+        A :class:`~repro.manager.forecast.SignalsHistory` demand ring
+        (one is created when omitted).  Every ``tick()`` pushes the fresh
+        snapshot, and any policy in the chain exposing ``bind_history``
+        (e.g. ``PredictiveSLO``) is handed this ring at construction — one
+        shared memory per control loop.
+    trackers:
+        Metric sinks (:class:`~repro.manager.trackers.Tracker` instances
+        or registered names): each ``tick()`` streams a flat per-tick
+        metrics dict to every sink via ``log(metrics, step)``.
     """
 
     def __init__(self, shell: Shell,
                  policy: Union[str, ElasticityPolicy] = "hysteresis",
-                 probes: Sequence[Probe] = (), *, interval: int = 1):
+                 probes: Sequence[Probe] = (), *, interval: int = 1,
+                 history: Optional[SignalsHistory] = None,
+                 trackers: Sequence = ()):
         self.shell = shell
         self.policy = get_elasticity_policy(policy)
         self.probes: List[Probe] = list(probes)
@@ -83,6 +98,12 @@ class Manager:
         self.tick_count = 0
         self.decisions: List[Decision] = []
         self._last_signals: Optional[Signals] = None
+        self.history = history if history is not None else SignalsHistory()
+        self.trackers: List[Tracker] = [get_tracker(t) for t in trackers]
+        for member in getattr(self.policy, "policies", None) or [self.policy]:
+            bind = getattr(member, "bind_history", None)
+            if callable(bind):
+                bind(self.history)
 
     def add_probe(self, probe: Probe) -> None:
         self.probes.append(probe)
@@ -134,6 +155,7 @@ class Manager:
         [3, 2, -1]
         """
         sig = self.signals()
+        self.history.push(sig)
         applied: List[ev.Event] = []
         plans: List[Plan] = []
         rejected: List[Tuple[ev.Event, str]] = []
@@ -148,8 +170,36 @@ class Manager:
                             events=tuple(applied), plans=tuple(plans),
                             rejected=tuple(rejected))
         self.decisions.append(decision)
+        if self.trackers:
+            metrics = self.tick_metrics(decision)
+            for tracker in self.trackers:
+                tracker.log(metrics, decision.tick)
         self.tick_count += 1
         return decision
+
+    def tick_metrics(self, decision: Decision) -> dict:
+        """Flat per-tick scalars for tracker sinks (aggregates only — a
+        thousand-tenant pool must not explode the metric namespace)."""
+        sig = decision.signals
+        default_slo = next(
+            (m.default_slo
+             for m in getattr(self.policy, "policies", None) or [self.policy]
+             if getattr(m, "default_slo", None) is not None), None)
+        return {
+            "free_regions": float(sig.free_regions),
+            "healthy_regions": float(sig.healthy_regions),
+            "tenants": float(len(sig.tenants)),
+            "queue_depth": float(sig.total_queue_depth),
+            "active": float(sum(t.active for t in sig.tenants)),
+            "granted": float(sum(t.granted for t in sig.tenants)),
+            "drop_rate": float(sig.drop_rate),
+            "fragmentation": float(sig.fragmentation),
+            "fabric_traces": float(sig.fabric_traces),
+            "events_applied": float(len(decision.events)),
+            "events_rejected": float(len(decision.rejected)),
+            "slo_violations": float(len(slo_violations(
+                sig, self.shell.state, default_slo))),
+        }
 
     def step(self) -> Optional[Decision]:
         """Interval-gated ``tick``: decide only every ``interval``-th call

@@ -55,9 +55,8 @@ import dataclasses
 from typing import (Any, Dict, List, Mapping, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
-import numpy as np
-
 from repro.shell.state import ON_SERVER, PoolState
+from repro.stats import percentile
 
 __all__ = [
     "Signals", "TenantSignals", "Probe", "ServerProbe", "StragglerProbe",
@@ -231,10 +230,8 @@ class ServerProbe:
             waits.setdefault(c.app_id, []).append(
                 c.admitted_tick - c.submitted_tick)
         admission = {app: sum(w) / len(w) for app, w in waits.items()}
-        adm_p50 = {app: float(np.percentile(w, 50))
-                   for app, w in waits.items()}
-        adm_p99 = {app: float(np.percentile(w, 99))
-                   for app, w in waits.items()}
+        adm_p50 = {app: percentile(w, 50) for app, w in waits.items()}
+        adm_p99 = {app: percentile(w, 99) for app, w in waits.items()}
         ch: Dict[str, Any] = {
             "queue_depth": depth,
             "queue_wait": wait,
@@ -339,7 +336,10 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
     """Fold probe channels + the shell's pool state into one snapshot.
 
     ``prev`` (the last snapshot) turns cumulative counters into per-window
-    deltas and rates; pass ``None`` on the first tick.
+    deltas and rates; pass ``None`` on the first tick.  The first window is
+    the *baseline*: with no ``prev`` the cumulative counters are kept but
+    every delta/rate reads 0, so a manager attached to a long-running
+    server doesn't see its entire history as one tick-0 demand spike.
     """
     state = shell.state
     ch = _merge_channels(probes)
@@ -362,8 +362,15 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
         for t in sorted(state.tenants, key=lambda t: t.name))
 
     def vec_delta(cur, prev_vec):
+        # First window (prev is None): the current sample IS the baseline,
+        # so deltas are zero — not the whole cumulative history.
+        if prev is None:
+            return (0,) * len(cur)
         return tuple(v - (prev_vec[i] if i < len(prev_vec) else 0)
                      for i, v in enumerate(cur))
+
+    def scalar_delta(cur, prev_val):
+        return 0 if prev is None else cur - prev_val
 
     traffic = tuple(int(v) for v in ch.get("port_traffic", ()))
     delta = vec_delta(traffic, prev.port_traffic if prev is not None else ())
@@ -375,21 +382,21 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
         local_ports, prev.local_port_traffic if prev is not None else ())
     offered = int(ch.get("offered_packets", 0))
     granted = int(ch.get("granted_packets", 0))
-    d_off = offered - (prev.offered_packets if prev is not None else 0)
-    d_grant = granted - (prev.granted_packets if prev is not None else 0)
+    d_off = scalar_delta(offered, prev.offered_packets if prev else 0)
+    d_grant = scalar_delta(granted, prev.granted_packets if prev else 0)
     drop_rate = 1.0 - d_grant / d_off if d_off > 0 else 0.0
     remote = int(ch.get("remote_packets", 0))
     local = int(ch.get("local_packets", 0))
-    d_remote = remote - (prev.remote_traffic if prev is not None else 0)
-    d_local = local - (prev.local_traffic if prev is not None else 0)
+    d_remote = scalar_delta(remote, prev.remote_traffic if prev else 0)
+    d_local = scalar_delta(local, prev.local_traffic if prev else 0)
     pc_hits = int(ch.get("plan_cache_hits", 0))
     pc_misses = int(ch.get("plan_cache_misses", 0))
     pc_inval = int(ch.get("plan_cache_invalidations", 0))
-    d_pc_hits = pc_hits - (prev.plan_cache_hits if prev is not None else 0)
-    d_pc_misses = pc_misses - (prev.plan_cache_misses
-                               if prev is not None else 0)
-    d_pc_inval = pc_inval - (prev.plan_cache_invalidations
-                             if prev is not None else 0)
+    d_pc_hits = scalar_delta(pc_hits, prev.plan_cache_hits if prev else 0)
+    d_pc_misses = scalar_delta(pc_misses,
+                               prev.plan_cache_misses if prev else 0)
+    d_pc_inval = scalar_delta(pc_inval,
+                              prev.plan_cache_invalidations if prev else 0)
 
     healthy = [r for r in state.regions if r.healthy]
     return Signals(

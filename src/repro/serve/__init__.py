@@ -14,10 +14,11 @@ harness at smaller scale.
 """
 from repro.serve.harness import (ReconfigEvent, SeededEngine,  # noqa: F401
                                  ServeHarness, ServeReport, StreamSpec,
-                                 front_loaded_arrivals,
-                                 heavy_tailed_arrivals)
+                                 dump_arrivals, front_loaded_arrivals,
+                                 heavy_tailed_arrivals, load_arrivals)
 
 __all__ = [
     "SeededEngine", "StreamSpec", "ReconfigEvent", "ServeHarness",
     "ServeReport", "front_loaded_arrivals", "heavy_tailed_arrivals",
+    "dump_arrivals", "load_arrivals",
 ]

@@ -39,9 +39,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.stats import percentile as _pct
+
 __all__ = [
     "SeededEngine", "StreamSpec", "ReconfigEvent", "ServeHarness",
     "ServeReport", "front_loaded_arrivals", "heavy_tailed_arrivals",
+    "dump_arrivals", "load_arrivals",
 ]
 
 _LCG_A = 1103515245
@@ -189,8 +192,34 @@ def _digest(completions) -> str:
     return h.hexdigest()
 
 
-def _pct(xs: List[float], q: float) -> float:
-    return float(np.percentile(xs, q)) if xs else 0.0
+def dump_arrivals(arrivals: Sequence[StreamSpec], path) -> None:
+    """Write an arrival schedule as JSONL (one stream per line) — the
+    interchange format scenario traces and CI artifacts use.  Round-trips
+    bit-exactly through :func:`load_arrivals`."""
+    import json
+    with open(path, "w") as f:
+        for s in arrivals:
+            f.write(json.dumps({
+                "tick": int(s.tick), "app_id": int(s.app_id),
+                "prompt": [int(t) for t in np.asarray(s.prompt).ravel()],
+                "max_new": int(s.max_new)}) + "\n")
+
+
+def load_arrivals(path) -> List[StreamSpec]:
+    """Read a JSONL arrival schedule written by :func:`dump_arrivals`."""
+    import json
+    out: List[StreamSpec] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            out.append(StreamSpec(
+                tick=int(d["tick"]), app_id=int(d["app_id"]),
+                prompt=np.asarray(d["prompt"], np.int32),
+                max_new=int(d["max_new"])))
+    return out
 
 
 class ServeHarness:
@@ -204,15 +233,21 @@ class ServeHarness:
     A tick is *steady* when nothing was submitted, nothing was
     reconfigured, and the admission queue was empty going in — i.e. the
     tick was pure decode, the path the fabric plan cache accelerates.
+
+    ``trackers`` (``repro.manager.trackers`` sinks, instances or registered
+    names) receive one flat metrics dict per executed tick via
+    ``log(metrics, step)`` — the same sink protocol the manager streams to.
     """
 
     def __init__(self, server, arrivals: Sequence[StreamSpec], *,
                  reconfigs: Sequence[ReconfigEvent] = (),
-                 max_ticks: int = 1_000_000):
+                 max_ticks: int = 1_000_000, trackers: Sequence = ()):
+        from repro.manager.trackers import get_tracker
         self.server = server
         self.arrivals = sorted(arrivals, key=lambda s: s.tick)
         self.reconfigs = sorted(reconfigs, key=lambda r: r.tick)
         self.max_ticks = max_ticks
+        self.trackers = [get_tracker(t) for t in trackers]
 
     def run(self) -> ServeReport:
         from repro.shell.server import StreamRequest
@@ -249,6 +284,15 @@ class ServeHarness:
             tick_us.append(dt)
             if steady:
                 steady_us.append(dt)
+            for tracker in self.trackers:
+                tracker.log({
+                    "tick_us": dt,
+                    "submitted": float(submitted),
+                    "reconfigured": float(reconfigured),
+                    "queued": float(srv.queued_count),
+                    "active": float(srv.active_count),
+                    "steady": 1.0 if steady else 0.0,
+                }, int(now))
             if srv._stalled and not pending and not events:
                 break               # every queued app awaits a Submit event
         wall = time.perf_counter() - t_run

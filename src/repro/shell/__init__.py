@@ -25,8 +25,8 @@ from repro.shell.policy import (BestFit, Defrag, FirstFit, PlacementPolicy,
 from repro.shell.regfile import (RegisterDelta, apply_delta, compute_delta,
                                  full_registers, registers_content_equal)
 from repro.shell.shell import LogEntry, Shell
-from repro.shell.state import (ON_SERVER, PoolState, RegionState, TenantEntry,
-                               check_invariants)
+from repro.shell.state import (ON_SERVER, PoolState, RegionState, SLOTarget,
+                               TenantEntry, check_invariants)
 
 __all__ = [
     "Shell", "LogEntry",
@@ -37,14 +37,15 @@ __all__ = [
     "get_policy", "register_policy",
     "RegisterDelta", "full_registers", "compute_delta", "apply_delta",
     "registers_content_equal",
-    "PoolState", "RegionState", "TenantEntry", "ON_SERVER",
+    "PoolState", "RegionState", "TenantEntry", "SLOTarget", "ON_SERVER",
     "check_invariants",
     # lazily resolved (pulls model machinery): ElasticServer & friends
     "ElasticServer", "ModelEngine", "StreamRequest", "StreamCompletion",
+    "ServerPool",
 ]
 
 _SERVER_NAMES = {"ElasticServer", "ModelEngine", "StreamRequest",
-                 "StreamCompletion"}
+                 "StreamCompletion", "ServerPool"}
 
 
 def __getattr__(name):

@@ -30,14 +30,21 @@ import dataclasses
 from typing import Optional, Tuple, Union
 
 from repro.core.module import ModuleFootprint
+from repro.shell.state import SLOTarget
 
 
 @dataclasses.dataclass(frozen=True)
 class Submit:
-    """Admit a tenant: place what fits, spill the rest on-server."""
+    """Admit a tenant: place what fits, spill the rest on-server.
+
+    ``slo`` optionally attaches per-tenant QoS budgets
+    (:class:`~repro.shell.state.SLOTarget`); the planner carries it onto
+    the tenant's ``TenantEntry`` where SLO-driven elasticity policies
+    read it."""
     tenant: str
     footprints: Tuple[ModuleFootprint, ...]
     app_id: int = 0
+    slo: Optional[SLOTarget] = None
 
     def __post_init__(self):
         object.__setattr__(self, "footprints", tuple(self.footprints))

@@ -137,7 +137,8 @@ def _handle_submit(state: PoolState, e: ev.Submit,
         raise ValueError(f"tenant {e.tenant!r} already admitted")
     state = state.with_tenant(TenantEntry(
         name=e.tenant, footprints=tuple(e.footprints),
-        placement=(ON_SERVER,) * len(e.footprints), app_id=e.app_id))
+        placement=(ON_SERVER,) * len(e.footprints), app_id=e.app_id,
+        slo=e.slo))
     for i, fp in enumerate(e.footprints):
         rid = policy.choose(state, fp)
         if rid is None:

@@ -208,13 +208,22 @@ class ElasticServer:
     ``port_traffic`` — so a ``shell.post`` that resets or re-routes a port
     is visible in the served traffic on the very next tick, without any
     recompilation (``fabric.trace_count`` stays flat).
+
+    ``slots_per_region`` (off by default) couples admission to the control
+    plane's grants: a tenant may hold at most ``max(1, placed_regions *
+    slots_per_region)`` concurrent decode slots, so ``Grow``/``Shrink``
+    decisions change its *service rate*, not just its routing — the
+    capacity model the SLO-driven scenarios exercise.  Unset, admission is
+    first-come-first-served over the free slots (the original behaviour).
     """
 
     def __init__(self, shell: Shell, *, n_slots: int = 4,
                  fabric_backend: str = "reference",
-                 plan_cache: bool = True):
+                 plan_cache: bool = True,
+                 slots_per_region: Optional[int] = None):
         self.shell = shell
         self.n_slots = n_slots
+        self.slots_per_region = slots_per_region
         # Decode ticks between reconfigurations offer byte-identical packet
         # vectors under an unchanged register epoch, so the fabric's
         # epoch-keyed plan cache (repro.fabric.cache) is on by default —
@@ -320,6 +329,12 @@ class ElasticServer:
     def idle(self) -> bool:
         return self.active_count == 0 and not self.queue
 
+    def drop_queued(self, app_id: int) -> None:
+        """Remove an app's queued requests (a departed tenant takes its
+        pending work with it); active slots finish their streams."""
+        self.queue = collections.deque(
+            r for r in self.queue if r.app_id != app_id)
+
     def reset(self) -> None:
         """Return the server to an empty, tick-zero state for the next
         scenario: queue, slots, completions and the stall latch clear, and
@@ -359,6 +374,12 @@ class ElasticServer:
         free = [i for i, slot in enumerate(self.slots) if slot is None]
         picked: List[Tuple[int, StreamRequest, int]] = []
         blocked: List[StreamRequest] = []
+        holding: Dict[int, int] = {}
+        if self.slots_per_region is not None:
+            for slot in self.slots:
+                if slot is not None:
+                    app = slot.request.app_id
+                    holding[app] = holding.get(app, 0) + 1
         while free and self.queue:
             cand = self.queue.popleft()
             port = self.shell.route(cand.app_id)
@@ -367,6 +388,16 @@ class ElasticServer:
                 # the next request — the control plane gates entry.
                 blocked.append(cand)
                 continue
+            if self.slots_per_region is not None:
+                # Grant-coupled capacity: regions buy concurrency (every
+                # tenant keeps one on-server slot so nobody starves).
+                t = self.shell.state.tenant_by_app(cand.app_id)
+                placed = t.placed_count if t is not None else 0
+                limit = max(1, placed * self.slots_per_region)
+                if holding.get(cand.app_id, 0) >= limit:
+                    blocked.append(cand)
+                    continue
+                holding[cand.app_id] = holding.get(cand.app_id, 0) + 1
             picked.append((free.pop(0), cand, port))
         self.queue.extendleft(reversed(blocked))
 
@@ -496,3 +527,119 @@ class ElasticServer:
             if self._stalled:
                 break
         return self.completions[start:]
+
+
+class ServerPool:
+    """Several ``ElasticServer`` frontends over one shell — the multi-server
+    pool shape production scenarios run.
+
+    One control plane, N serving processes: every server shares the pool's
+    register file (so a single ``Shell.post`` re-routes all of them), but
+    each owns its admission queue, decode slots, and shell-bound fabric.
+    Apps are pinned to a *home* server at engine registration
+    (``app_id % n_servers`` unless overridden), requests route there at
+    ``submit``, and ``step()`` advances every server on one clock.
+
+    Telemetry composes by construction: ``probes()`` returns one
+    ``ServerProbe`` per server, and ``assemble_signals`` merges them into
+    one ``Signals`` (dict channels merge per app, counters sum).  The
+    zero-retrace pin is per fabric — ``fabric_traces`` reports the *max*
+    over servers, which stays 1 when every fabric compiled exactly once.
+    """
+
+    def __init__(self, shell: Shell, n_servers: int, *, n_slots: int = 4,
+                 fabric_backend: str = "reference", plan_cache: bool = True,
+                 slots_per_region: Optional[int] = None):
+        if n_servers < 1:
+            raise ValueError(f"n_servers must be >= 1, got {n_servers}")
+        self.shell = shell
+        self.servers: List[ElasticServer] = [
+            ElasticServer(shell, n_slots=n_slots,
+                          fabric_backend=fabric_backend,
+                          plan_cache=plan_cache,
+                          slots_per_region=slots_per_region)
+            for _ in range(n_servers)]
+        self._home: Dict[int, ElasticServer] = {}
+
+    def __len__(self) -> int:
+        return len(self.servers)
+
+    # ---- engines / routing --------------------------------------------
+    def server_for(self, app_id: int) -> ElasticServer:
+        """The app's home server (defaults to ``app_id % n_servers``)."""
+        return self._home.get(app_id,
+                              self.servers[app_id % len(self.servers)])
+
+    def register_engine(self, app_id: int, engine: Any,
+                        *, server: Optional[int] = None) -> None:
+        home = self.servers[server if server is not None
+                            else app_id % len(self.servers)]
+        home.register_engine(app_id, engine)
+        self._home[app_id] = home
+
+    def submit(self, request: StreamRequest) -> int:
+        return self.server_for(request.app_id).submit(request)
+
+    def drop_queued(self, app_id: int) -> None:
+        """Remove an app's queued requests (a departed tenant takes its
+        pending work with it)."""
+        srv = self.server_for(app_id)
+        srv.queue = collections.deque(
+            r for r in srv.queue if r.app_id != app_id)
+
+    # ---- one pool clock -----------------------------------------------
+    def step(self) -> List[StreamCompletion]:
+        finished: List[StreamCompletion] = []
+        for srv in self.servers:
+            finished.extend(srv.step())
+        return finished
+
+    def reset(self) -> None:
+        for srv in self.servers:
+            srv.reset()
+
+    # ---- aggregate views ----------------------------------------------
+    @property
+    def queued_count(self) -> int:
+        return sum(s.queued_count for s in self.servers)
+
+    @property
+    def active_count(self) -> int:
+        return sum(s.active_count for s in self.servers)
+
+    @property
+    def idle(self) -> bool:
+        return all(s.idle for s in self.servers)
+
+    @property
+    def completions(self) -> List[StreamCompletion]:
+        out: List[StreamCompletion] = []
+        for srv in self.servers:
+            out.extend(srv.completions)
+        return out
+
+    @property
+    def port_traffic(self) -> np.ndarray:
+        total = self.servers[0].port_traffic.copy()
+        for srv in self.servers[1:]:
+            total = total + srv.port_traffic
+        return total
+
+    @property
+    def offered_packets(self) -> int:
+        return sum(int(s.offered_packets) for s in self.servers)
+
+    @property
+    def granted_packets(self) -> int:
+        return sum(int(s.granted_packets) for s in self.servers)
+
+    @property
+    def fabric_traces(self) -> int:
+        """Worst per-fabric compile count (the zero-retrace pin: == 1)."""
+        return max(int(s.fabric.trace_count) for s in self.servers)
+
+    def probes(self) -> List["ServerProbe"]:
+        """One ``ServerProbe`` per member server; feed the whole list to
+        ``Manager(probes=...)`` and the channels merge into one
+        ``Signals``."""
+        return [s.probe() for s in self.servers]

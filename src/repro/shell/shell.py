@@ -155,10 +155,11 @@ class Shell:
         return t.placement[0] + 1
 
     # ---- convenience verbs (thin wrappers over post) ------------------
-    def submit(self, name: str, footprints, app_id: int = 0) -> List[int]:
+    def submit(self, name: str, footprints, app_id: int = 0,
+               slo=None) -> List[int]:
         fps = getattr(footprints, "footprints", footprints)
         self.post(ev.Submit(tenant=name, footprints=tuple(fps),
-                            app_id=app_id))
+                            app_id=app_id, slo=slo))
         return self.placement_of(name)
 
     def release(self, name: str) -> None:

@@ -22,6 +22,47 @@ ON_SERVER = -1                   # placement value for host-executed modules
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """Per-tenant service-level objective the manager optimizes against.
+
+    Budgets are per control window, in the same units ``Signals`` reports:
+    ``admission_p99_ticks`` bounds the tail submit->admit latency
+    (``TenantSignals.admission_p99``), ``drop_rate`` bounds the fabric's
+    per-window drop fraction (``Signals.drop_rate`` — the fabric is shared,
+    so every SLO'd tenant carries the pool's drop budget).  ``None`` means
+    "no budget on this axis".  The target travels with the tenant: it
+    arrives on ``Submit``, lives on ``TenantEntry``, and policies such as
+    ``repro.manager.PredictiveSLO`` read it straight off ``PoolState``.
+    """
+
+    admission_p99_ticks: Optional[float] = None
+    drop_rate: Optional[float] = None
+
+    def violations(self, *, admission_p99: float,
+                   drop_rate: float) -> Tuple[str, ...]:
+        """Which budgets the given window readings exceed (may be empty)."""
+        out = []
+        if (self.admission_p99_ticks is not None
+                and admission_p99 > self.admission_p99_ticks):
+            out.append("admission_p99")
+        if self.drop_rate is not None and drop_rate > self.drop_rate:
+            out.append("drop_rate")
+        return tuple(out)
+
+    def to_json(self) -> Dict[str, Optional[float]]:
+        return {"admission_p99_ticks": self.admission_p99_ticks,
+                "drop_rate": self.drop_rate}
+
+    @staticmethod
+    def from_json(d: Optional[Dict[str, Optional[float]]]
+                  ) -> Optional["SLOTarget"]:
+        if d is None:
+            return None
+        return SLOTarget(admission_p99_ticks=d.get("admission_p99_ticks"),
+                         drop_rate=d.get("drop_rate"))
+
+
+@dataclasses.dataclass(frozen=True)
 class RegionState:
     """A fixed-size slice of the mesh — the PR-region analogue (immutable)."""
 
@@ -50,6 +91,7 @@ class TenantEntry:
     placement: Tuple[int, ...]          # region id or ON_SERVER per module
     app_id: int = 0
     max_regions: Optional[int] = None   # elasticity cap set by shrink/grow
+    slo: Optional[SLOTarget] = None     # QoS budgets policies optimize for
 
     @property
     def on_server_modules(self) -> Tuple[int, ...]:

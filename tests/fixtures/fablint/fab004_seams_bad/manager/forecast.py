@@ -1,0 +1,37 @@
+"""Fixture: manager seam registrations that drift from the protocol."""
+
+
+def register_forecaster(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+def register_tracker(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+@register_forecaster("swapped")
+class SwappedForecaster:
+    # drifted: positional prefix is (horizon, series), seam wants
+    # (series, horizon)
+    def forecast(self, horizon, series):
+        return None
+
+
+@register_tracker("mute")
+class MuteTracker:
+    # drifted: no log() at all, and no Tracker base to inherit one from
+    def close(self):
+        pass
+
+
+class LateTracker:
+    # drifted prefix, registered via the registry dict below
+    def log(self, step, metrics):
+        pass
+
+
+_TRACKERS = {"late": LateTracker}

@@ -1,0 +1,39 @@
+"""Fixture: conforming manager seam registrations."""
+
+
+def register_forecaster(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+def register_tracker(name):
+    def deco(cls):
+        return cls
+    return deco
+
+
+class Tracker:
+    def log(self, metrics, step):
+        raise NotImplementedError
+
+
+@register_forecaster("flat")
+class FlatForecaster:
+    def forecast(self, series, horizon):
+        return None
+
+
+@register_tracker("echo")
+class EchoTracker:
+    def log(self, metrics, step, **extra):
+        pass
+
+
+@register_tracker("quiet")
+class QuietTracker(Tracker):
+    # no log() of its own: inherits the conforming base implementation
+    pass
+
+
+_FORECASTERS = {"flat": FlatForecaster}

@@ -104,6 +104,25 @@ def test_fab004_clean_tree_passes():
     assert _lint(FIX / "fab004_good", select=["FAB004"]) == []
 
 
+def test_fab004_flags_seam_registry_drift():
+    """Manager seam registries (forecasters/trackers) carry the same
+    conformance obligation: registered classes must present the protocol
+    method with its positional prefix, whether registered by decorator
+    or by registry-dict literal."""
+    vs = _lint(FIX / "fab004_seams_bad", select=["FAB004"])
+    msgs = " | ".join(v.message for v in vs)
+    assert "SwappedForecaster.forecast" in msgs and "drifts" in msgs
+    assert "MuteTracker" in msgs and "log(metrics, step)" in msgs
+    assert "LateTracker.log" in msgs
+    assert len(vs) == 3          # swapped prefix + missing log + dict-reg
+
+
+def test_fab004_conforming_seam_registrations_pass():
+    """Conforming prefixes (extra trailing/keyword params allowed) and
+    protocol methods inherited from the seam base class are clean."""
+    assert _lint(FIX / "fab004_seams_good", select=["FAB004"]) == []
+
+
 # ---------------------------------------------------------------------------
 # FAB005 — bare clip on addresses
 # ---------------------------------------------------------------------------

@@ -177,12 +177,32 @@ class TestTelemetry:
         s1 = manager.signals()
         server.step()
         s2 = manager.signals()
-        assert sum(s1.port_traffic_delta) == 1          # first window
+        # First window is the baseline: cumulative counters visible,
+        # deltas zero (the sample itself seeds the diff).
+        assert sum(s1.port_traffic) == 1
+        assert sum(s1.port_traffic_delta) == 0
         assert sum(s2.port_traffic_delta) == 1          # one more grant
         assert s2.port_traffic[1] == 2                  # cumulative
         a = s2.tenant("a")
         assert a.requested == 2 and a.granted == 2 and a.active == 1
         assert s2.by_app(1).name == "b"
+
+    def test_first_window_has_no_tick0_spike(self):
+        """Regression: a manager attached to a long-running server must
+        not read the server's entire cumulative history as one giant
+        first-window delta (which used to trip grow/drop thresholds on
+        tick 0)."""
+        shell, server = self.make_server()
+        for _ in range(4):
+            server.submit(self.req(0, max_new=2))
+        server.run()                        # plenty of history pre-manager
+        manager = Manager(shell, probes=[server.probe()])
+        s = manager.signals()
+        assert sum(s.port_traffic) > 4              # cumulative survives
+        assert sum(s.port_traffic_delta) == 0       # no first-window spike
+        assert s.drop_rate == 0.0
+        assert s.remote_traffic_delta == 0 and s.local_traffic_delta == 0
+        assert s.plan_cache_hits_delta == 0
 
     def test_drop_rate_is_per_window(self):
         shell, server = self.make_server()
@@ -281,13 +301,15 @@ class TestTelemetry:
         s1 = assemble_signals(shell, [fabric.probe()], tick=0)
         assert s1.remote_port_traffic == (0, 0, 2, 0)
         assert s1.local_port_traffic == (1, 1, 0, 0)
-        assert s1.remote_port_traffic_delta == (0, 0, 2, 0)
-        assert s1.region_remote_delta(1) == 2      # rid 1 -> port 2
+        # First window: baseline only, deltas zero.
+        assert s1.remote_port_traffic_delta == (0, 0, 0, 0)
+        assert s1.region_remote_delta(1) == 0
         fabric.account(plan, src_shard=1, n_shards=2)
         s2 = assemble_signals(shell, [fabric.probe()], tick=1, prev=s1)
         assert s2.remote_port_traffic == (1, 1, 2, 0)   # cumulative
         assert s2.remote_port_traffic_delta == (1, 1, 0, 0)
         assert s2.local_port_traffic_delta == (0, 0, 2, 0)
+        assert s2.region_remote_delta(1) == 0      # port 2 delta this window
 
     def test_account_stats_folds_per_port_split(self):
         from repro.core.registers import CrossbarRegisters
@@ -568,6 +590,75 @@ class TestPolicyPlumbing:
             def decide(self, signals, state):
                 return []
         assert isinstance(get_elasticity_policy("noop_test_policy"), Noop)
+
+    def test_chain_merges_decisions_in_member_then_emission_order(self):
+        """The chain's contract is deterministic concatenation: member
+        order first, each member's own emission order within — and the
+        manager applies (and the shell logs) exactly that order."""
+        from repro.shell import events as ev
+
+        class GrowTwo:
+            name = "grow_two"
+
+            def decide(self, signals, state):
+                return [ev.Grow(tenant="a", n_regions=2),
+                        ev.Grow(tenant="b", n_regions=2)]
+
+        class ShrinkOne:
+            name = "shrink_one"
+
+            def decide(self, signals, state):
+                return [ev.Shrink(tenant="a", n_regions=1)]
+
+        shell = make_shell(n=6)
+        shell.submit("a", [fp(), fp()], app_id=0)
+        shell.submit("b", [fp(), fp()], app_id=1)
+        chain = PolicyChain([GrowTwo(), ShrinkOne()])
+        decided = chain.decide(
+            sig(tenants=[ten("a", granted=2), ten("b", app_id=1,
+                                                  granted=2)]),
+            shell.state)
+        assert [(type(e).__name__, e.tenant) for e in decided] == [
+            ("Grow", "a"), ("Grow", "b"), ("Shrink", "a")]
+        manager = Manager(shell, chain, interval=1)
+        d = manager.tick()
+        assert list(d.kinds()) == ["Grow", "Grow", "Shrink"]
+        logged = [e.event for e in shell.log[-3:]]
+        assert [(type(e).__name__, e.tenant) for e in logged] == [
+            ("Grow", "a"), ("Grow", "b"), ("Shrink", "a")]
+        # reversing the chain reverses the merge — order is the chain's,
+        # not the event type's
+        rev = PolicyChain([ShrinkOne(), GrowTwo()])
+        decided = rev.decide(sig(tenants=[ten("a", granted=1)]),
+                             shell.state)
+        assert [type(e).__name__ for e in decided] == [
+            "Shrink", "Grow", "Grow"]
+
+    def test_chained_cooldowns_are_per_member_same_tenant_same_tick(self):
+        """Two chained Hysteresis instances see the same snapshot and can
+        both target one tenant in one tick: the duplicate Grow is an
+        idempotent no-op at the planner, the grant moves once, and each
+        member stamps its *own* cooldown — the next pressured window is
+        silent from both."""
+        shell = make_shell(n=4)
+        shell.submit("a", [fp(), fp()], app_id=0)
+        shell.post(Shrink(tenant="a", n_regions=1))
+        h1 = Hysteresis(grow_queue=1, patience=1, cooldown=4)
+        h2 = Hysteresis(grow_queue=1, patience=1, cooldown=4)
+        manager = Manager(shell, PolicyChain([h1, h2]), interval=1)
+        pressured = sig(tick=0, tenants=[ten("a", requested=2, granted=1,
+                                             queue=3)])
+        events = manager.policy.decide(pressured, shell.state)
+        assert [(type(e).__name__, e.n_regions) for e in events] == [
+            ("Grow", 2), ("Grow", 2)]
+        for e in events:
+            shell.post(e)
+        assert shell.state.tenant("a").placed_count == 2   # moved once
+        assert h1.in_cooldown("a", 1) and h2.in_cooldown("a", 1)
+        # next tick, still pressured: both members hold their cooldown
+        still = sig(tick=1, tenants=[ten("a", requested=2, granted=2,
+                                         queue=3)])
+        assert manager.policy.decide(still, shell.state) == []
 
 
 # ----------------------------------------------------------------------

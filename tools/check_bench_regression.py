@@ -34,6 +34,13 @@ within-file way (machine-neutral by construction): the steady-state
 cached/uncached decode-tick ratio must stay <= ``--serve-max-ratio``,
 cached and uncached completion digests must match in both scenarios,
 and the reconfiguration storm must keep ``fabric_retraces`` at 1.
+
+``--manager-json BENCH_manager.json`` gates the autoscaling trajectory
+within-file (seeded counting metrics, so machine-neutral too): every
+``slo_compare`` row must show the predictive policy with zero
+forecastable violations and strictly fewer violation ticks than the
+reactive baseline on the same seed, and the ``trace_replay`` row must be
+bit-identical with ``fabric_retraces`` pinned at 1.
 """
 from __future__ import annotations
 
@@ -140,6 +147,65 @@ def check_serve(serve_json: Path, max_ratio: float) -> list[str]:
     return failures
 
 
+def check_manager(manager_json: Path) -> list[str]:
+    """Gate the manager trajectory within one file (seeded and counting —
+    machine-neutral by construction).
+
+    - ``slo_compare`` rows: the predictive run must leave zero
+      forecastable violations, strictly fewer violation ticks than the
+      reactive baseline on the same seed (<= when the baseline already
+      has none), and both runs must hold ``fabric_retraces`` at 1;
+    - ``trace_replay`` rows: record -> replay must be bit-identical with
+      ``fabric_retraces`` at 1 on both sides.
+    Returns failure tags; a file with none of these rows fails too — the
+    bench not producing its gated rows is itself a regression."""
+    failures = []
+    rows = json.loads(manager_json.read_text()).get("rows", [])
+    gated = 0
+    for row in rows:
+        mode = row.get("mode")
+        if mode == "slo_compare":
+            gated += 1
+            tag = (f"manager slo_compare {row.get('scenario')} "
+                   f"seed={row.get('seed')}")
+            rea = int(row.get("reactive_violation_ticks", -1))
+            pre = int(row.get("predictive_violation_ticks", -1))
+            fc = int(row.get("predictive_forecastable", -1))
+            retraces = (int(row.get("reactive_retraces", -1)),
+                        int(row.get("predictive_retraces", -1)))
+            verdict = "ok"
+            if fc != 0:
+                verdict = "FAIL (forecastable violations)"
+                failures.append(tag + " forecastable")
+            if pre < 0 or rea < 0 or (pre >= rea if rea > 0 else pre > rea):
+                verdict = "FAIL (predictive not better)"
+                failures.append(tag + " violation_ticks")
+            if retraces != (1, 1):
+                verdict = "FAIL (retraced)"
+                failures.append(tag + " retraces")
+            print(f"  {tag}: violation_ticks reactive={rea} "
+                  f"predictive={pre}, forecastable={fc}, "
+                  f"retraces={retraces} {verdict}")
+        elif mode == "trace_replay":
+            gated += 1
+            identical = bool(row.get("bit_identical", False))
+            retraces = (int(row.get("record_retraces", -1)),
+                        int(row.get("replay_retraces", -1)))
+            verdict = "ok"
+            if not identical:
+                verdict = "FAIL (replay differs)"
+                failures.append("manager trace_replay bit-identity")
+            if retraces != (1, 1):
+                verdict = "FAIL (retraced)"
+                failures.append("manager trace_replay retraces")
+            print(f"  manager trace_replay: bit_identical={identical}, "
+                  f"retraces={retraces} {verdict}")
+    if gated == 0:
+        print(f"  manager: no gated rows in {manager_json} FAIL")
+        failures.append("manager rows missing")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("committed", type=Path,
@@ -164,6 +230,11 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-max-ratio", type=float, default=0.75,
                     help="fail if the cached steady-state decode tick "
                          "exceeds this fraction of the uncached tick")
+    ap.add_argument("--manager-json", type=Path, default=None,
+                    help="also gate a fresh BENCH_manager.json within-"
+                         "file: predictive beats reactive on violation "
+                         "ticks with zero forecastable violations, and "
+                         "record->replay stays bit-identical")
     args = ap.parse_args(argv)
 
     baseline = args.baseline if args.mode == "relative" else None
@@ -175,6 +246,8 @@ def main(argv=None) -> int:
                                          args.debug_guard_max_ratio)
         if args.serve_json is not None:
             failures += check_serve(args.serve_json, args.serve_max_ratio)
+        if args.manager_json is not None:
+            failures += check_manager(args.manager_json)
         return 1 if failures else 0
 
     unit = (f"{args.metric} vs {args.baseline}" if baseline
@@ -205,6 +278,8 @@ def main(argv=None) -> int:
                                       args.debug_guard_max_ratio)
     if args.serve_json is not None:
         failures += check_serve(args.serve_json, args.serve_max_ratio)
+    if args.manager_json is not None:
+        failures += check_manager(args.manager_json)
 
     if failures:
         print(f"perf regression: {unit} exceeded "

@@ -563,6 +563,21 @@ _REFERENCE_SIGNATURES = {
     "combine": ["y", "plan", "weights"],
 }
 
+# The manager's pluggable seams carry the same conformance obligation as
+# fabric backends: anything registered behind the seam must present the
+# protocol method with the protocol's positional prefix, or callers break
+# only on the implementation that drifted.  registry-dict name /
+# decorator name -> (seam label, base class, method, positional prefix
+# after self).
+_SEAM_REGISTRIES = {
+    "_FORECASTERS": ("forecaster", "Forecaster",
+                     "forecast", ["series", "horizon"]),
+    "register_forecaster": ("forecaster", "Forecaster",
+                            "forecast", ["series", "horizon"]),
+    "_TRACKERS": ("tracker", "Tracker", "log", ["metrics", "step"]),
+    "register_tracker": ("tracker", "Tracker", "log", ["metrics", "step"]),
+}
+
 
 class BackendSeamConformance(Rule):
     """Every fabric backend must honour the seam.  Classes registered as
@@ -574,7 +589,15 @@ class BackendSeamConformance(Rule):
     that drifted*.  The kernels half of the seam: every ``kernels/*/``
     package must pair its ``kernel.py`` with a ``ref.py`` exporting at
     least one public ``*_ref`` oracle — kernels without a bit-equality
-    reference cannot be property-tested against the dense plan."""
+    reference cannot be property-tested against the dense plan.
+
+    The manager's seam registries are held to the same standard: classes
+    registered as forecasters (``_FORECASTERS`` entries or
+    ``@register_forecaster(...)`` decorations) must define
+    ``forecast(series, horizon)``, and registered trackers
+    (``_TRACKERS`` / ``@register_tracker(...)``) must define
+    ``log(metrics, step)`` — with those exact positional prefixes, since
+    the manager calls them positionally every tick."""
 
     code = "FAB004"
     title = "fabric backend / kernel package breaks the seam contract"
@@ -591,6 +614,7 @@ class BackendSeamConformance(Rule):
             if entry is None:
                 continue          # class defined outside the linted tree
             yield from self._check_class(entry[0], entry[1], expected)
+        yield from self._check_seam_registries(project, classes)
         yield from self._check_kernels(project)
 
     def _reference_signatures(self, classes) -> Dict[str, List[str]]:
@@ -649,6 +673,64 @@ class BackendSeamConformance(Rule):
                     src, fn,
                     f"backend `{cls.name}.{name}` signature "
                     f"({', '.join(got)}) drifts from the reference seam "
+                    f"({', '.join(want)})")
+
+    # ---- manager seam registries (forecasters / trackers) -------------
+    def _seam_registered(self, project: Project
+                         ) -> Iterator[Tuple[SourceFile, str, str]]:
+        """(file, registry key, class name) for every class registered
+        behind a manager seam — via registry-dict literal or decorator
+        (bare or call form)."""
+        for src in project.files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.Assign) and isinstance(
+                        node.value, ast.Dict):
+                    for t in node.targets:
+                        key = getattr(t, "id", None)
+                        if key in _SEAM_REGISTRIES:
+                            for v in node.value.values:
+                                name = _dotted(v).split(".")[-1]
+                                if name:
+                                    yield src, key, name
+                elif isinstance(node, ast.ClassDef):
+                    for deco in node.decorator_list:
+                        target = deco.func if isinstance(
+                            deco, ast.Call) else deco
+                        key = _dotted(target).split(".")[-1]
+                        if key in _SEAM_REGISTRIES:
+                            yield src, key, node.name
+
+    def _check_seam_registries(self, project: Project,
+                               classes) -> Iterator[Violation]:
+        seen = set()
+        for src, key, clsname in self._seam_registered(project):
+            label, base, method, want = _SEAM_REGISTRIES[key]
+            if (label, clsname) in seen:
+                continue
+            seen.add((label, clsname))
+            entry = classes.get(clsname)
+            if entry is None:
+                continue          # class defined outside the linted tree
+            csrc, cls = entry
+            methods = {item.name: item for item in cls.body
+                       if isinstance(item, ast.FunctionDef)}
+            fn = methods.get(method)
+            if fn is None:
+                bases = {_dotted(b).split(".")[-1] for b in cls.bases}
+                if base in bases:
+                    continue      # inherited conforming implementation
+                yield from self._emit(
+                    csrc, cls,
+                    f"registered {label} `{cls.name}` does not define "
+                    f"`{method}({', '.join(want)})` — the manager calls "
+                    f"it positionally every tick")
+                continue
+            got = [a.arg for a in fn.args.args if a.arg != "self"]
+            if got[:len(want)] != want:
+                yield from self._emit(
+                    csrc, fn,
+                    f"{label} `{cls.name}.{method}` signature "
+                    f"({', '.join(got)}) drifts from the seam protocol "
                     f"({', '.join(want)})")
 
     def _check_kernels(self, project: Project) -> Iterator[Violation]:
