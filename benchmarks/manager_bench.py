@@ -24,9 +24,17 @@ Row kinds:
 - one ``mode="trace_replay"`` row — records a churn workload to
   ``benchmarks/manager_trace.jsonl`` (the CI artifact), replays it, and
   reports whether the two result JSONs are bit-identical.
+- ``mode="isolation"`` rows (``ISOLATION_RUNS``) — the adversarial
+  scenario run twice per seed: once quiet (same honest tenants, no
+  attackers) and once under attack.  The attack run records to
+  ``benchmarks/manager_attack_trace.jsonl`` (the CI artifact).  Gated by
+  ``--manager-json``: honest-tenant admission p99 under attack stays
+  within ``p99_bound`` of the quiet twin, every masked packet is charged
+  to an attacker-owned source port, and ``fabric_retraces`` holds at 1
+  through the attack.
 
 ``bench_manager(mode="predictive")`` runs only the gated predictive rows
-— the fast CI smoke.
+— the fast CI smoke; ``mode="adversarial"`` only the isolation rows.
 """
 from __future__ import annotations
 
@@ -56,6 +64,66 @@ SLO_RUNS = [
 ]
 
 TRACE_ARTIFACT = Path(__file__).resolve().parent / "manager_trace.jsonl"
+ATTACK_TRACE = Path(__file__).resolve().parent / "manager_attack_trace.jsonl"
+
+# Isolation grid: (seed, ticks, attacker mix).  Cascade-failer mixes are
+# deliberately excluded here: region failures legitimately mask honest
+# traffic in flight, which would void the masked_honest_src == 0 gate
+# (tests/test_adversary.py covers those mixes property-wise instead).
+ISOLATION_RUNS = [
+    (0, 40, ("noisy_neighbor", "dest_sprayer")),
+    (1, 40, ("noisy_neighbor", "dest_sprayer", "drop_retrier")),
+]
+
+# The gate bound: honest-tenant admission p99 under attack must stay
+# within this multiple of the quiet twin (floored at 1 tick).
+ISOLATION_P99_BOUND = 4.0
+
+
+def _honest_p99(res) -> float:
+    """Admission p99 (ticks) over honest-tenant completions only —
+    attacker app_ids live at >= 10 by construction in ``build_spec``."""
+    from repro.stats import percentile
+
+    waits = [c.admitted_tick - c.submitted_tick
+             for c in res.server.completions
+             if c.app_id < 10 and c.submitted_tick >= 0]
+    return round(percentile(waits, 99.0), 3) if waits else 0.0
+
+
+def _isolation_rows() -> List[dict]:
+    from repro.manager import adversarial_policy, build_spec, run_scenario
+
+    rows = []
+    for seed, ticks, mix in ISOLATION_RUNS:
+        per = {}
+        for label, attackers, record in (("quiet", (), None),
+                                         ("attack", mix, ATTACK_TRACE)):
+            spec = build_spec("adversarial", ticks=ticks, seed=seed,
+                              attackers=attackers)
+            per[label] = run_scenario(spec, seed=seed, ticks=ticks,
+                                      policy=adversarial_policy(),
+                                      record_path=record)
+        quiet, attack = per["quiet"], per["attack"]
+        masked = [int(v) for v in attack.server.masked_by_src]
+        rows.append({
+            "mode": "isolation",
+            "scenario": "adversarial", "seed": seed, "ticks": ticks,
+            "attackers": list(mix),
+            "p99_bound": ISOLATION_P99_BOUND,
+            "honest_p99_quiet": _honest_p99(quiet),
+            "honest_p99_attack": _honest_p99(attack),
+            "honest_completions_quiet": sum(
+                1 for c in quiet.server.completions if c.app_id < 10),
+            "honest_completions_attack": sum(
+                1 for c in attack.server.completions if c.app_id < 10),
+            "masked_attacker_src": sum(masked[1:]),
+            "masked_honest_src": masked[0] if masked else 0,
+            "quiet_retraces": quiet.fabric_retraces,
+            "attack_retraces": attack.fabric_retraces,
+            "artifact": ATTACK_TRACE.name,
+        })
+    return rows
 
 
 def _slo_compare_rows() -> List[dict]:
@@ -127,8 +195,21 @@ def bench_manager(mode: str = "all") -> Tuple[List[dict], Dict[str, str]]:
                            policy=default_policy())
         rows.append({"policy": "default", "mode": "production",
                      **res.summary()})
+    if mode == "adversarial":
+        rows += _isolation_rows()
+        claims = {
+            "isolation": ("isolation rows: honest-tenant admission p99 "
+                          "under attack stays within p99_bound of the "
+                          "quiet twin, masked packets are charged only "
+                          "to attacker-owned source ports, and "
+                          "fabric_retraces == 1 throughout (gated by "
+                          "--manager-json)"),
+        }
+        return rows, claims
     rows += _slo_compare_rows()
     rows.append(_trace_replay_row())
+    if mode == "all":
+        rows += _isolation_rows()
     claims = {
         "closed_loop": ("every Grow/Shrink/Migrate in these runs was "
                         "posted by the Manager from Signals; the scenario "
@@ -143,9 +224,21 @@ def bench_manager(mode: str = "all") -> Tuple[List[dict], Dict[str, str]]:
         "record_replay": ("trace_replay row: a recorded workload replays "
                           "to a bit-identical result JSON"),
     }
+    if mode == "all":
+        claims["isolation"] = (
+            "isolation rows: honest-tenant admission p99 under attack "
+            "stays within p99_bound of the quiet twin, masked packets "
+            "are charged only to attacker-owned source ports, and "
+            "fabric_retraces == 1 throughout (gated by --manager-json)")
     return rows, claims
 
 
 def bench_manager_predictive() -> Tuple[List[dict], Dict[str, str]]:
     """The ``--predictive`` CI smoke: only the gated rows."""
     return bench_manager(mode="predictive")
+
+
+def bench_manager_adversarial() -> Tuple[List[dict], Dict[str, str]]:
+    """The ``--adversarial`` CI smoke: quiet-vs-attack isolation rows
+    only, recording the attack trace artifact."""
+    return bench_manager(mode="adversarial")

@@ -8,6 +8,9 @@ file is gone).
     PYTHONPATH=src python -m benchmarks.run fig5 area  # subset
     PYTHONPATH=src python -m benchmarks.run manager --predictive
                            # only the gated predictive-SLO rows (CI smoke)
+    PYTHONPATH=src python -m benchmarks.run manager --adversarial
+                           # only the gated quiet-vs-attack isolation rows
+                           # (CI smoke; records the attack trace artifact)
 """
 from __future__ import annotations
 
@@ -16,7 +19,9 @@ import sys
 from pathlib import Path
 
 from benchmarks.fabric_bench import bench_fabric
-from benchmarks.manager_bench import bench_manager, bench_manager_predictive
+from benchmarks.manager_bench import (bench_manager,
+                                      bench_manager_adversarial,
+                                      bench_manager_predictive)
 from benchmarks.moe_bench import bench_moe
 from benchmarks.paper_tables import (bench_area, bench_bandwidth_allocation,
                                      bench_fig5_elasticity,
@@ -58,6 +63,11 @@ def main(argv=None) -> int:
         args = [a for a in args if a != "--predictive"]
         BENCHES["manager"] = ("repro.manager — predictive-SLO gated rows "
                               "only (CI smoke)", bench_manager_predictive)
+    if "--adversarial" in args:
+        args = [a for a in args if a != "--adversarial"]
+        BENCHES["manager"] = ("repro.manager — quiet-vs-attack isolation "
+                              "rows only (CI smoke)",
+                              bench_manager_adversarial)
     names = args or list(BENCHES)
     results = {}
     failures = []

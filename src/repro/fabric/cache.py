@@ -51,9 +51,10 @@ class CacheEntry:
 
     ``daddr``/``caddr``/``cmask`` (the flat dispatch scatter address, the
     combine gather address and its validity mask) and ``acct`` (the
-    host-side accounting triple) are filled lazily on first use — a
-    plan-only workload (the ``ElasticServer`` tick) never pays for
-    addresses it does not read.
+    host-side accounting tuple: counts, offered, granted, and the
+    per-source masked/dropped attribution pair when a source vector was
+    known) are filled lazily on first use — a plan-only workload (the
+    ``ElasticServer`` tick) never pays for addresses it does not read.
     """
 
     __slots__ = ("plan", "src", "daddr", "caddr", "cmask", "acct")
@@ -64,7 +65,7 @@ class CacheEntry:
         self.daddr = None
         self.caddr = None
         self.cmask = None
-        self.acct: Optional[Tuple[np.ndarray, int, int]] = None
+        self.acct: Optional[Tuple[np.ndarray, int, int, Any]] = None
 
 
 class PlanCache:

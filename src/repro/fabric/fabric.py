@@ -39,7 +39,7 @@ from jax.experimental import checkify
 
 from repro.core import arbiter
 from repro.core.arbiter import DispatchPlan
-from repro.core.registers import CrossbarRegisters
+from repro.core.registers import CrossbarRegisters, ErrorCode
 from repro.fabric import sanitize
 from repro.fabric.backends import get_backend
 from repro.fabric.cache import PlanCache, plan_key
@@ -167,6 +167,15 @@ class Fabric:
         # traffic of the port they would relocate.
         self.remote_port_traffic = np.zeros(self.registers.n_ports, np.int64)
         self.local_port_traffic = np.zeros(self.registers.n_ports, np.int64)
+        # Per-SOURCE-port attribution of the drop tally: masked packets
+        # (INVALID_DEST — the paper's crossbar masking path) and all
+        # non-granted offers are charged to the port that *originated*
+        # them, so hostile traffic debits the offender's own budget
+        # instead of folding into the global counters (PR 9 isolation
+        # telemetry).  Only calls that pass ``account(plan, src)`` fill
+        # these — a plan alone does not carry its sources.
+        self.masked_by_src = np.zeros(self.registers.n_ports, np.int64)
+        self.dropped_by_src = np.zeros(self.registers.n_ports, np.int64)
         self._trace_counts = {"plan": 0, "dispatch": 0, "combine": 0,
                               "transfer": 0}
         self._debug_explicit = debug is not None
@@ -265,6 +274,8 @@ class Fabric:
         self.port_traffic = np.zeros_like(self.port_traffic)
         self.remote_port_traffic = np.zeros_like(self.remote_port_traffic)
         self.local_port_traffic = np.zeros_like(self.local_port_traffic)
+        self.masked_by_src = np.zeros_like(self.masked_by_src)
+        self.dropped_by_src = np.zeros_like(self.dropped_by_src)
         self.offered_packets = 0
         self.granted_packets = 0
         self.remote_packets = 0
@@ -272,37 +283,48 @@ class Fabric:
         if self.plan_cache is not None:
             self.plan_cache.reset_stats()
 
-    def account(self, plan, *, src_shard: Optional[int] = None,
+    def account(self, plan, src=None, *, src_shard: Optional[int] = None,
                 n_shards: Optional[int] = None) -> None:
         """Fold one concrete ``DispatchPlan`` into the cumulative traffic
         counters (host-side; call it with plans that have left the device).
 
         ``port_traffic`` accumulates per-destination grants, ``offered_``/
         ``granted_packets`` the drop tally (``dst = -1`` padding rows are
-        never offered load).  When ``src_shard``/``n_shards`` are given the
-        grants also split into ``local_packets`` (granted into the source
-        shard's own contiguous port block) vs ``remote_packets`` (granted
-        across the mesh axis — the §IV-E crossbar hops that actually cost
-        ICI bandwidth), each with a per-port vector
-        (``local_port_traffic`` / ``remote_port_traffic``); the manager's
-        ``Signals`` surfaces all of them.
+        never offered load).  ``src`` — the [T] source-port vector the plan
+        was computed from — additionally charges every masked packet
+        (INVALID_DEST) and every non-granted offer to its *originating*
+        port (``masked_by_src`` / ``dropped_by_src``): the isolation
+        attribution the manager's abuse telemetry reads, so a tenant
+        spraying invalid destinations debits only its own budget.  When
+        ``src_shard``/``n_shards`` are given the grants also split into
+        ``local_packets`` (granted into the source shard's own contiguous
+        port block) vs ``remote_packets`` (granted across the mesh axis —
+        the §IV-E crossbar hops that actually cost ICI bandwidth), each
+        with a per-port vector (``local_port_traffic`` /
+        ``remote_port_traffic``); the manager's ``Signals`` surfaces all
+        of them.
 
         Plans handed back by the plan cache take a device-free fast path:
-        the counts/offered/granted triple is pulled to the host once per
-        entry and replayed as numpy scalars on every later tick.
+        the counts/offered/granted scalars *and* the per-source
+        attribution vectors are pulled to the host once per entry and
+        replayed as numpy values on every later tick.
         """
         cache = self.plan_cache
         if cache is not None and src_shard is None:
             entry = cache.entry_for_plan(self.epoch, plan)
             if entry is not None:
                 if entry.acct is None:
+                    src_v = src if src is not None else entry.src
                     entry.acct = (np.asarray(plan.counts, np.int64),
                                   int((np.asarray(plan.dst) >= 0).sum()),
-                                  int(np.asarray(plan.keep).sum()))
-                counts, offered, granted = entry.acct
+                                  int(np.asarray(plan.keep).sum()),
+                                  self._src_attribution(plan, src_v))
+                counts, offered, granted, by_src = entry.acct
                 self._add_counts(counts)
                 self.offered_packets += offered
                 self.granted_packets += granted
+                if by_src is not None:
+                    self._add_src_counts(*by_src)
                 return
         self._add_counts(plan.counts)
         dst = np.asarray(plan.dst)
@@ -310,6 +332,9 @@ class Fabric:
         self.offered_packets += int((dst >= 0).sum())
         granted = int(keep.sum())
         self.granted_packets += granted
+        by_src = self._src_attribution(plan, src)
+        if by_src is not None:
+            self._add_src_counts(*by_src)
         if src_shard is not None and n_shards:
             # Port space comes from the PLAN, not the cumulative vectors —
             # those may be longer (a wider register file was accounted
@@ -342,6 +367,37 @@ class Fabric:
             self._add_split_counts(
                 np.asarray(stats.get("local_counts", np.zeros(n)), np.int64),
                 np.asarray(stats.get("remote_counts", np.zeros(n)), np.int64))
+
+    @staticmethod
+    def _src_attribution(plan, src) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Per-source-port (masked, dropped) histograms for one plan.
+
+        A packet is *offered* when ``dst >= 0`` (padding rows carry no
+        load), *masked* when the arbiter answered INVALID_DEST (isolation
+        violation, out-of-range destination or a reset port), *dropped*
+        when offered but not granted for any reason.  Both tallies key on
+        the originating source port — the attribution the abuse-penalty
+        policies consume."""
+        if src is None:
+            return None
+        src = np.asarray(src)
+        dst = np.asarray(plan.dst)
+        err = np.asarray(plan.error)
+        keep = np.asarray(plan.keep).astype(bool)
+        n = int(np.asarray(plan.counts).shape[0])
+        offered = dst >= 0
+        srcc = np.clip(src, 0, n - 1)
+        masked = offered & (err == int(ErrorCode.INVALID_DEST))
+        dropped = offered & ~keep
+        return (np.bincount(srcc[masked], minlength=n)[:n].astype(np.int64),
+                np.bincount(srcc[dropped], minlength=n)[:n].astype(np.int64))
+
+    def _add_src_counts(self, masked: np.ndarray, dropped: np.ndarray) -> None:
+        n = max(masked.shape[0], dropped.shape[0])
+        self.masked_by_src = self._grow_to(self.masked_by_src, n)
+        self.dropped_by_src = self._grow_to(self.dropped_by_src, n)
+        self.masked_by_src[:masked.shape[0]] += masked
+        self.dropped_by_src[:dropped.shape[0]] += dropped
 
     @staticmethod
     def _grow_to(vec: np.ndarray, n: int) -> np.ndarray:

@@ -25,17 +25,26 @@ them autonomously:
 - ``repro.manager.trackers``  — metric sinks (``noop`` / ``in_memory`` /
   ``jsonl``, composable) streaming per-tick control-loop metrics.
 - ``repro.manager.scenarios`` — seeded, deterministic workload scenarios
-  (bursty / diurnal / churn / failure_storm / production) stepping
-  workload + server(s) + manager together; powers the property tests and
-  ``BENCH_manager.json``.
+  (bursty / diurnal / churn / failure_storm / production / adversarial)
+  stepping workload + server(s) + manager together; powers the property
+  tests and ``BENCH_manager.json``.
+- ``repro.manager.adversary`` — the hostile-tenant seam
+  (``@register_attacker``): noisy_neighbor / dest_sprayer / drop_retrier /
+  cascade_failer behaviors the adversarial scenario steps against honest
+  tenants, backing the isolation property suite (``tests/test_adversary``).
 """
+from repro.manager.adversary import (ATTACKER_KINDS, Attacker, AttackView,
+                                     CascadeFailer, DestSprayer, DropRetrier,
+                                     FailAction, NoisyNeighbor, RequestAction,
+                                     SprayAction, attacker_names,
+                                     get_attacker, register_attacker)
 from repro.manager.forecast import (EWMA, Forecast, Forecaster, Periodic,
                                     SignalsHistory, forecaster_names,
                                     get_forecaster, register_forecaster)
 from repro.manager.manager import Decision, Manager
 from repro.manager.policies import (ElasticityPolicy, FairShare, Hysteresis,
                                     PolicyChain, TrafficAwareDefrag,
-                                    get_elasticity_policy,
+                                    abuse_scores, get_elasticity_policy,
                                     register_elasticity_policy)
 from repro.manager.slo import (PredictiveSLO, SLOTarget,
                                forecastable_violations, slo_violations)
@@ -49,7 +58,11 @@ from repro.manager.trackers import (InMemoryTracker, JsonlTracker,
 __all__ = [
     "Manager", "Decision",
     "ElasticityPolicy", "Hysteresis", "TrafficAwareDefrag", "FairShare",
-    "PolicyChain", "get_elasticity_policy", "register_elasticity_policy",
+    "PolicyChain", "abuse_scores", "get_elasticity_policy",
+    "register_elasticity_policy",
+    "Attacker", "AttackView", "SprayAction", "RequestAction", "FailAction",
+    "NoisyNeighbor", "DestSprayer", "DropRetrier", "CascadeFailer",
+    "register_attacker", "get_attacker", "attacker_names", "ATTACKER_KINDS",
     "Signals", "TenantSignals", "Probe", "ServerProbe", "StragglerProbe",
     "FabricProbe", "assemble_signals", "fragmentation",
     "SignalsHistory", "Forecast", "Forecaster", "EWMA", "Periodic",
@@ -61,13 +74,14 @@ __all__ = [
     # lazily resolved (pulls numpy/server machinery): scenario harness
     "run_scenario", "ScenarioResult", "ScenarioSpec", "TenantSpec",
     "SyntheticEngine", "SCENARIO_KINDS", "build_spec", "default_policy",
-    "predictive_policy", "RecordedWorkload", "DEFAULT_SLO",
+    "predictive_policy", "adversarial_policy", "RecordedWorkload",
+    "DEFAULT_SLO",
 ]
 
 _SCENARIO_NAMES = {"run_scenario", "ScenarioResult", "ScenarioSpec",
                    "TenantSpec", "SyntheticEngine", "SCENARIO_KINDS",
                    "build_spec", "default_policy", "predictive_policy",
-                   "RecordedWorkload", "DEFAULT_SLO"}
+                   "adversarial_policy", "RecordedWorkload", "DEFAULT_SLO"}
 
 
 def __getattr__(name):

@@ -39,6 +39,15 @@ from repro.shell.state import ON_SERVER, PoolState
 VictimSelector = Callable[[Signals, PoolState, str, int], Tuple[int, ...]]
 
 
+def abuse_scores(signals: Signals) -> Dict[str, int]:
+    """Per-tenant isolation-abuse evidence: this window's masked
+    (INVALID_DEST) packets attributed to each tenant's own source ports.
+    Only offenders appear — a clean tenant is absent, not zero — so policy
+    hooks can gate on membership cheaply."""
+    return {ts.name: ts.masked_requests for ts in signals.tenants
+            if ts.masked_requests > 0}
+
+
 @runtime_checkable
 class ElasticityPolicy(Protocol):
     """Strategy seam for the manager's control loop."""
@@ -197,12 +206,19 @@ class TrafficAwareDefrag:
     split the sharded fabric accounts), so the moves with the largest ICI
     savings land inside the ``max_moves`` budget first.  When no per-port
     split was reported this window, ``"ici"`` falls back to cold-first.
+
+    ``abuse_penalty`` > 0 subtracts ``penalty * masked_requests`` (the
+    window's per-source INVALID_DEST attribution, ``abuse_scores``) from a
+    module's ranking traffic, so an abuser's modules sort coldest and are
+    the first disrupted — the manager-level response to a tenant probing
+    the masking registers.
     """
 
     name = "traffic_defrag"
 
     def __init__(self, *, max_moves: int = 1, threshold: float = 0.0,
-                 min_remote_fraction: float = 0.0, rank_by: str = "cold"):
+                 min_remote_fraction: float = 0.0, rank_by: str = "cold",
+                 abuse_penalty: float = 0.0):
         if rank_by not in ("cold", "ici"):
             raise ValueError(
                 f"rank_by must be 'cold' or 'ici', got {rank_by!r}")
@@ -210,6 +226,7 @@ class TrafficAwareDefrag:
         self.threshold = threshold
         self.min_remote_fraction = min_remote_fraction
         self.rank_by = rank_by
+        self.abuse_penalty = abuse_penalty
 
     @staticmethod
     def coldest_regions(signals: Signals, state: PoolState, tenant: str,
@@ -230,14 +247,17 @@ class TrafficAwareDefrag:
             return []
         free = sorted(r.rid for r in state.free_regions())
         hbm = {r.rid: r.hbm_bytes for r in state.regions}
-        # Candidates: (traffic, src_rid, tenant, module_idx) — coldest first.
+        abuse = (abuse_scores(signals) if self.abuse_penalty > 0 else {})
+        # Candidates: (traffic, src_rid, tenant, module_idx) — coldest
+        # first; abusers' modules rank below genuinely cold ones.
         candidates = []
         for t in state.tenants:
             for i, p in enumerate(t.placement):
                 if p == ON_SERVER:
                     continue
-                candidates.append((signals.region_traffic_delta(p), p,
-                                   t.name, i))
+                score = (signals.region_traffic_delta(p)
+                         - self.abuse_penalty * abuse.get(t.name, 0))
+                candidates.append((score, p, t.name, i))
         if (self.rank_by == "ici"
                 and any(signals.remote_port_traffic_delta)):
             # Largest ICI savings first; cold-first breaks ties so the
@@ -275,17 +295,31 @@ class FairShare:
     below grow to it.  While capacity >= number of requesting tenants,
     every requesting tenant is allocated at least one region (the
     no-starvation property).
+
+    ``abuse_penalty`` > 0 divides a tenant's WRR weight by
+    ``1 + penalty * masked_requests`` for the window (``abuse_scores``
+    evidence): a tenant caught probing the masking registers fills later
+    and to a smaller share, without ever dropping a clean tenant below its
+    own weight — abuse costs only the abuser's budget.
     """
 
     name = "fair_share"
 
     def __init__(self, weights: Optional[Mapping[str, float]] = None, *,
                  cooldown: int = 2,
-                 victim_selector: Optional[VictimSelector] = None):
+                 victim_selector: Optional[VictimSelector] = None,
+                 abuse_penalty: float = 0.0):
         self.weights = dict(weights or {})
         self.cooldown = cooldown
         self.victim_selector = victim_selector
+        self.abuse_penalty = abuse_penalty
         self._last_action: Dict[str, int] = {}
+
+    def _effective_weight(self, ts) -> float:
+        w = self.weights.get(ts.name, 1.0)
+        if self.abuse_penalty > 0 and ts.masked_requests > 0:
+            w /= 1.0 + self.abuse_penalty * ts.masked_requests
+        return w
 
     def share(self, signals: Signals,
               state: PoolState) -> Dict[str, int]:
@@ -295,9 +329,10 @@ class FairShare:
         the allocation at 0 (so ``decide`` shrinks it there) but takes no
         part in the fill."""
         alloc = {ts.name: 0 for ts in signals.tenants if ts.requested > 0}
+        eff = {ts.name: self._effective_weight(ts)
+               for ts in signals.tenants}
         requesting = [ts for ts in signals.tenants
-                      if ts.requested > 0
-                      and self.weights.get(ts.name, 1.0) > 0]
+                      if ts.requested > 0 and eff[ts.name] > 0]
         remaining = signals.healthy_regions
         while remaining > 0:
             under = [ts for ts in requesting
@@ -305,7 +340,7 @@ class FairShare:
             if not under:
                 break
             pick = min(under, key=lambda ts: (
-                alloc[ts.name] / self.weights.get(ts.name, 1.0), ts.name))
+                alloc[ts.name] / eff[ts.name], ts.name))
             alloc[pick.name] += 1
             remaining -= 1
         return alloc

@@ -32,6 +32,13 @@ Scenario kinds:
   schedule (reusing ``repro.serve.heavy_tailed_arrivals``), per-tenant
   SLOs, and optionally several servers sharing one shell
   (``n_servers > 1`` builds a ``ServerPool``).
+- ``adversarial``   — honest tenants on a *pre-materialized* schedule
+  plus hostile tenants driven by ``repro.manager.adversary`` attackers
+  acting through ordinary tenant entry points.  The honest schedule is
+  drawn from its own rng stream, so ``attackers=()`` yields a quiet twin
+  with a byte-identical honest workload — the paired baseline the
+  isolation properties and the ``BENCH_manager.json`` ``isolation`` row
+  compare against.
 
 Every applied workload action can be **recorded** (``record_path=`` writes
 one JSONL row per action in exact applied order) and **replayed**
@@ -51,8 +58,10 @@ from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
 import numpy as np
 
 from repro.core.module import ModuleFootprint
+from repro.manager.adversary import (AttackView, FailAction, RequestAction,
+                                     SprayAction, get_attacker)
 from repro.manager.manager import Decision, Manager
-from repro.manager.policies import (Hysteresis, PolicyChain,
+from repro.manager.policies import (FairShare, Hysteresis, PolicyChain,
                                     TrafficAwareDefrag)
 from repro.manager.slo import (PredictiveSLO, SLOTarget,
                                forecastable_violations, slo_violations)
@@ -123,6 +132,11 @@ class ScenarioSpec:
     # queue — the coupling SLO scenarios need.  ``None`` keeps the original
     # uncoupled admission.
     slots_per_region: Optional[int] = None
+    # Hostile tenants: (tenant_name, attacker_kind) pairs resolved through
+    # ``repro.manager.adversary.get_attacker`` and stepped every generative
+    # tick.  The named tenants must appear in ``tenants`` — attackers act
+    # only through the tenant entry points of a real roster member.
+    attackers: Tuple[Tuple[str, str], ...] = ()
 
 
 def _bursty_arrivals(p: float = 0.25, lo: int = 2, hi: int = 6) -> ArrivalFn:
@@ -209,9 +223,35 @@ def _production_schedule(tenants: Sequence[TenantSpec], *, ticks: int,
     return schedule
 
 
+def _adversarial_schedule(tenants: Sequence[TenantSpec], *, ticks: int,
+                          seed: int) -> Schedule:
+    """Bursty honest workload, pre-materialized from its *own* rng stream.
+
+    The adversarial scenario's honest traffic must not depend on whether
+    attackers run (attackers consume the scenario rng), so the schedule is
+    drawn up front from ``default_rng([seed, 0xAD])`` — the attack run and
+    its quiet twin (``attackers=()``) submit byte-identical honest
+    requests on identical ticks."""
+    rng = np.random.default_rng([seed, 0xAD])
+    schedule: Schedule = {}
+    for tick in range(ticks):
+        for t in tenants:
+            if rng.random() < 0.3:
+                for _ in range(int(rng.integers(1, 4))):
+                    schedule.setdefault(tick, []).append(
+                        (t.app_id, [int(rng.integers(0, 64))],
+                         int(rng.integers(2, 6))))
+    return schedule
+
+
+# The default hostile mix: one bandwidth hog and one masked-request sprayer.
+DEFAULT_ATTACK_MIX = ("noisy_neighbor", "dest_sprayer")
+
+
 def build_spec(kind: str, *, ticks: int, seed: int = 0,
                n_tenants: int = 200,
-               slots_per_region: Optional[int] = None) -> ScenarioSpec:
+               slots_per_region: Optional[int] = None,
+               attackers: Optional[Sequence[str]] = None) -> ScenarioSpec:
     """Materialize a named scenario.  ``slots_per_region`` opts any kind
     into grant-coupled service rate (``production`` defaults to 2 — its
     SLO comparisons are only meaningful when grants buy throughput)."""
@@ -240,12 +280,25 @@ def build_spec(kind: str, *, ticks: int, seed: int = 0,
                             default_slo=DEFAULT_SLO,
                             slots_per_region=(2 if slots_per_region is None
                                               else slots_per_region))
+    if kind == "adversarial":
+        honest = _roster(False, ticks)
+        mix = tuple(DEFAULT_ATTACK_MIX if attackers is None else attackers)
+        mal = tuple(TenantSpec(f"mal{i}_{k}", app_id=10 + i, modules=1,
+                               slo=DEFAULT_SLO)
+                    for i, k in enumerate(mix))
+        return ScenarioSpec(
+            kind, honest + mal,
+            schedule=_adversarial_schedule(honest, ticks=ticks, seed=seed),
+            default_slo=DEFAULT_SLO,
+            attackers=tuple((t.name, k) for t, k in zip(mal, mix)),
+            slots_per_region=(2 if slots_per_region is None
+                              else slots_per_region))
     raise ValueError(f"unknown scenario kind {kind!r}; "
                      f"known: {sorted(SCENARIO_KINDS)}")
 
 
 SCENARIO_KINDS = ("bursty", "diurnal", "churn", "failure_storm",
-                  "production")
+                  "production", "adversarial")
 
 
 # ----------------------------------------------------------------------
@@ -369,6 +422,18 @@ def predictive_policy(*, forecaster="ewma", horizon: int = 4,
     ])
 
 
+def adversarial_policy(*, abuse_penalty: float = 1.0):
+    """The abuse-aware loop: weighted fair sharing that down-weights
+    tenants originating masked traffic, plus placement hygiene that ranks
+    abuser modules first for disruption — the manager-level response the
+    isolation bench measures on top of the fabric's structural masking."""
+    return PolicyChain([
+        FairShare(abuse_penalty=abuse_penalty,
+                  victim_selector=TrafficAwareDefrag.coldest_regions),
+        TrafficAwareDefrag(max_moves=1, abuse_penalty=abuse_penalty),
+    ])
+
+
 def _audit_params(policy, interval: int) -> Tuple[int, int]:
     """(horizon, min_history) in *ticks* for the forecastable-violation
     audit, read off a PredictiveSLO in the chain when present (its units
@@ -439,6 +504,7 @@ def run_scenario(kind: Union[str, ScenarioSpec, RecordedWorkload], *,
     default_slo = spec.default_slo
 
     live: Dict[str, TenantSpec] = {}
+    attackers = {name: get_attacker(k) for name, k in spec.attackers}
     storm_heal: Dict[int, int] = {}         # rid -> heal tick
     trace: List[dict] = []
     recorded: List[dict] = []
@@ -475,6 +541,31 @@ def run_scenario(kind: Union[str, ScenarioSpec, RecordedWorkload], *,
         recorded.append({"op": "request", "tick": tick, "app_id": app_id,
                          "prompt": list(prompt), "max_new": max_new})
 
+    def apply_spray(tick, app_id, dsts):
+        # Raw packets offered from the tenant's own placed port — the
+        # attacker's data-plane entry point.  Unplaced tenants have no
+        # port to offer from, so the spray silently evaporates (and is
+        # not recorded: replay applies only what actually happened).
+        # Offers are chunked to the server's ``n_slots`` shape (padded
+        # with -1) so hostile traffic reuses the one compiled plan the
+        # honest path traced — the zero-retrace contract holds under
+        # attack because the attacker shares the victim's data path.
+        t = shell.state.tenant_by_app(app_id)
+        if t is None or not t.placed_ports:
+            return
+        fab = (frontend.servers[app_id % n_servers].fabric
+               if n_servers > 1 else frontend.fabric)
+        src_port = t.placed_ports[0]
+        for i in range(0, len(dsts), n_slots):
+            chunk = list(dsts[i:i + n_slots])
+            chunk += [-1] * (n_slots - len(chunk))
+            dst = np.asarray(chunk, np.int32)
+            src = np.full(dst.shape, src_port, np.int32)
+            plan = fab.plan(dst, src)
+            fab.account(plan, src)
+        recorded.append({"op": "spray", "tick": tick, "app_id": app_id,
+                         "dsts": [int(d) for d in dsts]})
+
     for tick in range(ticks):
         if workload is not None:
             # -- replay: apply the recorded rows verbatim, in order ------
@@ -492,6 +583,9 @@ def run_scenario(kind: Union[str, ScenarioSpec, RecordedWorkload], *,
                     apply_request(tick, int(row["app_id"]),
                                   [int(t) for t in row["prompt"]],
                                   int(row["max_new"]))
+                elif op == "spray":
+                    apply_spray(tick, int(row["app_id"]),
+                                [int(d) for d in row["dsts"]])
                 else:
                     raise ValueError(f"unknown recorded op {op!r}")
         else:
@@ -532,6 +626,46 @@ def run_scenario(kind: Union[str, ScenarioSpec, RecordedWorkload], *,
                             [int(rng.integers(0, 64))],
                             int(rng.integers(2, 6)))
 
+            # -- adversaries: hostile tenants act through the ordinary
+            # tenant entry points (requests, raw offers, region faults) —
+            # whatever they break, a real tenant could have broken
+            for name, attacker in attackers.items():
+                t = shell.state.find_tenant(name)
+                if t is None:
+                    continue
+                masked_vec = frontend.masked_by_src
+                dropped_vec = frontend.dropped_by_src
+                view = AttackView(
+                    tick=tick, app_id=t.app_id, name=name,
+                    host_port=shell.state.host_port,
+                    my_ports=t.placed_ports,
+                    n_ports=shell.state.n_ports,
+                    capacity=int(shell.capacity),
+                    healthy_rids=tuple(r.rid for r in shell.state.regions
+                                       if r.healthy),
+                    utilization=shell.utilization(),
+                    my_masked=int(sum(masked_vec[p] for p in t.placed_ports
+                                      if p < len(masked_vec))),
+                    my_dropped=int(sum(dropped_vec[p] for p in t.placed_ports
+                                       if p < len(dropped_vec))))
+                for action in attacker.step(view, rng):
+                    if isinstance(action, RequestAction):
+                        apply_request(tick, t.app_id, [int(action.prompt)],
+                                      int(action.max_new))
+                    elif isinstance(action, SprayAction):
+                        apply_spray(tick, t.app_id,
+                                    [int(d) for d in action.dsts])
+                    elif isinstance(action, FailAction):
+                        rid = int(action.rid)
+                        if (rid not in storm_heal
+                                and any(r.rid == rid and r.healthy
+                                        for r in shell.state.regions)):
+                            apply_fault(tick, "fail", rid)
+                            storm_heal[rid] = tick + spec.heal_after
+                    else:
+                        raise TypeError(
+                            f"unknown attacker action {action!r}")
+
         # -- the two loops ---------------------------------------------
         frontend.step()
         decision = manager.step()
@@ -553,6 +687,8 @@ def run_scenario(kind: Union[str, ScenarioSpec, RecordedWorkload], *,
             "port_traffic": [int(v) for v in frontend.port_traffic],
             "dropped": int(frontend.offered_packets
                            - frontend.granted_packets),
+            "masked_by_src": [int(v) for v in frontend.masked_by_src],
+            "dropped_by_src": [int(v) for v in frontend.dropped_by_src],
             "fabric_traces": retraces,
             "violations": violations,
             "tenants": {t.name: [t.placed_count, len(t.footprints)]
@@ -584,6 +720,7 @@ def run_scenario(kind: Union[str, ScenarioSpec, RecordedWorkload], *,
                 "hbm_gb": hbm_gb, "interval": interval,
                 "n_servers": n_servers,
                 "slots_per_region": spec.slots_per_region,
+                "attackers": [list(pair) for pair in spec.attackers],
                 "default_slo": (default_slo.to_json()
                                 if default_slo is not None else None)}
         RecordedWorkload(meta, recorded).dump(record_path)

@@ -30,6 +30,11 @@ channel                 value
                         (int sequence — ranks ports by ICI cost)
 ``local_port_traffic``  cumulative same-shard grants per destination port
                         (int sequence)
+``masked_by_src``       cumulative INVALID_DEST packets per *originating*
+                        source port (int sequence — the isolation
+                        attribution abuse policies read)
+``dropped_by_src``      cumulative non-granted offers per originating
+                        source port (int sequence)
 ``straggler_score``     ``{region: EWMA / fleet median}``
 ``fabric_traces``       cumulative XLA retrace count (int)
 ``plan_cache_hits``     cumulative fabric plan-cache hits (int)
@@ -92,11 +97,22 @@ class TenantSignals:
     admission_wait: float = 0.0  # mean submit->admit ticks, this window
     admission_p50: float = 0.0   # median submit->admit ticks, this window
     admission_p99: float = 0.0   # tail submit->admit ticks, this window
+    admission_p99_delta: float = 0.0  # p99 change vs the previous window
+    # isolation / QoS attribution (PR 9): this window's fabric traffic
+    # keyed to the tenant's own crossbar ports
+    granted_traffic: int = 0    # window grants INTO its placed ports
+    masked_requests: int = 0    # window INVALID_DEST packets FROM its ports
+    dropped_requests: int = 0   # window non-granted offers FROM its ports
 
     @property
     def starved(self) -> bool:
         """Wants acceleration, has none."""
         return self.requested > 0 and self.granted == 0
+
+    @property
+    def abusive(self) -> bool:
+        """Originated masked (isolation-violating) traffic this window."""
+        return self.masked_requests > 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +134,12 @@ class Signals:
     granted_packets: int = 0
     drop_rate: float = 0.0      # per-window 1 - granted/offered
     fabric_traces: int = 0
+    # isolation attribution (PR 9): masked / non-granted packets charged to
+    # the *originating* source port — cumulative plus per-window deltas
+    masked_by_src: Tuple[int, ...] = ()
+    dropped_by_src: Tuple[int, ...] = ()
+    masked_by_src_delta: Tuple[int, ...] = ()
+    dropped_by_src_delta: Tuple[int, ...] = ()
     # per-axis (sharded fabric) traffic: grants that crossed the mesh axis
     # vs. stayed on the source shard's own port block
     remote_traffic: int = 0
@@ -177,6 +199,28 @@ class Signals:
         crosses the interconnect."""
         total = self.remote_traffic_delta + self.local_traffic_delta
         return self.remote_traffic_delta / total if total > 0 else 0.0
+
+    def granted_share_ratio(self, name: str,
+                            weights: Optional[Mapping[str, float]] = None,
+                            ) -> float:
+        """A tenant's share of this window's granted fabric traffic divided
+        by its WRR weight share — 1.0 means it consumed exactly its
+        allocation, > 1.0 means it is over-served, 0.0 when the window is
+        quiet or the tenant is unknown.  Only tenants that moved traffic
+        this window count toward the weight denominator (an idle tenant's
+        unused share is legitimately redistributed by the arbiter)."""
+        mover_traffic = {t.name: t.granted_traffic for t in self.tenants
+                         if t.granted_traffic > 0}
+        total = sum(mover_traffic.values())
+        mine = mover_traffic.get(name, 0)
+        if total <= 0 or mine <= 0:
+            return 0.0
+        weights = weights or {}
+        wsum = sum(float(weights.get(n, 1.0)) for n in mover_traffic)
+        wmine = float(weights.get(name, 1.0))
+        if wsum <= 0 or wmine <= 0:
+            return 0.0
+        return (mine / total) / (wmine / wsum)
 
     @property
     def plan_cache_hit_rate(self) -> float:
@@ -242,6 +286,8 @@ class ServerProbe:
             "port_traffic": tuple(int(v) for v in srv.port_traffic),
             "offered_packets": int(srv.offered_packets),
             "granted_packets": int(srv.granted_packets),
+            "masked_by_src": tuple(int(v) for v in srv.masked_by_src),
+            "dropped_by_src": tuple(int(v) for v in srv.dropped_by_src),
             "fabric_traces": int(srv.fabric.trace_count),
         }
         if getattr(srv.fabric, "plan_cache", None) is not None:
@@ -282,6 +328,8 @@ class FabricProbe:
             ch["port_traffic"] = tuple(int(v) for v in f.port_traffic)
             ch["offered_packets"] = int(f.offered_packets)
             ch["granted_packets"] = int(f.granted_packets)
+            ch["masked_by_src"] = tuple(int(v) for v in f.masked_by_src)
+            ch["dropped_by_src"] = tuple(int(v) for v in f.dropped_by_src)
         if f.remote_packets or f.local_packets:
             ch["remote_packets"] = int(f.remote_packets)
             ch["local_packets"] = int(f.local_packets)
@@ -349,17 +397,6 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
     admission = ch.get("admission_wait", {})
     adm_p50 = ch.get("admission_p50", {})
     adm_p99 = ch.get("admission_p99", {})
-    tenants = tuple(
-        TenantSignals(
-            name=t.name, app_id=t.app_id,
-            requested=len(t.footprints), granted=t.placed_count,
-            queue_depth=int(depth.get(t.app_id, 0)),
-            active=int(active.get(t.app_id, 0)),
-            queue_wait=float(wait.get(t.app_id, 0.0)),
-            admission_wait=float(admission.get(t.app_id, 0.0)),
-            admission_p50=float(adm_p50.get(t.app_id, 0.0)),
-            admission_p99=float(adm_p99.get(t.app_id, 0.0)))
-        for t in sorted(state.tenants, key=lambda t: t.name))
 
     def vec_delta(cur, prev_vec):
         # First window (prev is None): the current sample IS the baseline,
@@ -374,6 +411,38 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
 
     traffic = tuple(int(v) for v in ch.get("port_traffic", ()))
     delta = vec_delta(traffic, prev.port_traffic if prev is not None else ())
+    masked_src = tuple(int(v) for v in ch.get("masked_by_src", ()))
+    dropped_src = tuple(int(v) for v in ch.get("dropped_by_src", ()))
+    masked_src_delta = vec_delta(
+        masked_src, prev.masked_by_src if prev is not None else ())
+    dropped_src_delta = vec_delta(
+        dropped_src, prev.dropped_by_src if prev is not None else ())
+
+    def over_ports(vec, ports):
+        return int(sum(vec[p] for p in ports if p < len(vec)))
+
+    def p99_delta(t, cur_p99):
+        if prev is None:
+            return 0.0
+        before = prev.tenant(t.name)
+        return cur_p99 - (before.admission_p99 if before is not None else 0.0)
+
+    tenants = tuple(
+        TenantSignals(
+            name=t.name, app_id=t.app_id,
+            requested=len(t.footprints), granted=t.placed_count,
+            queue_depth=int(depth.get(t.app_id, 0)),
+            active=int(active.get(t.app_id, 0)),
+            queue_wait=float(wait.get(t.app_id, 0.0)),
+            admission_wait=float(admission.get(t.app_id, 0.0)),
+            admission_p50=float(adm_p50.get(t.app_id, 0.0)),
+            admission_p99=float(adm_p99.get(t.app_id, 0.0)),
+            admission_p99_delta=p99_delta(
+                t, float(adm_p99.get(t.app_id, 0.0))),
+            granted_traffic=over_ports(delta, t.placed_ports),
+            masked_requests=over_ports(masked_src_delta, t.placed_ports),
+            dropped_requests=over_ports(dropped_src_delta, t.placed_ports))
+        for t in sorted(state.tenants, key=lambda t: t.name))
     remote_ports = tuple(int(v) for v in ch.get("remote_port_traffic", ()))
     local_ports = tuple(int(v) for v in ch.get("local_port_traffic", ()))
     remote_ports_delta = vec_delta(
@@ -409,6 +478,9 @@ def assemble_signals(shell, probes: Sequence[Probe], *, tick: int,
         offered_packets=offered, granted_packets=granted,
         drop_rate=drop_rate,
         fabric_traces=int(ch.get("fabric_traces", 0)),
+        masked_by_src=masked_src, dropped_by_src=dropped_src,
+        masked_by_src_delta=masked_src_delta,
+        dropped_by_src_delta=dropped_src_delta,
         remote_traffic=remote, local_traffic=local,
         remote_traffic_delta=d_remote, local_traffic_delta=d_local,
         remote_port_traffic=remote_ports, local_port_traffic=local_ports,

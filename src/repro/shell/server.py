@@ -263,6 +263,17 @@ class ElasticServer:
     def granted_packets(self) -> int:
         return self.fabric.granted_packets
 
+    @property
+    def masked_by_src(self) -> np.ndarray:
+        """INVALID_DEST packets per originating source port (isolation
+        attribution — hostile sprays debit the offender's port only)."""
+        return self.fabric.masked_by_src
+
+    @property
+    def dropped_by_src(self) -> np.ndarray:
+        """All non-granted offers per originating source port."""
+        return self.fabric.dropped_by_src
+
     # ---- engines ------------------------------------------------------
     def register_model(self, app_id: int, cfg, *, max_len: int = 128,
                        seed: int = 0) -> None:
@@ -446,8 +457,10 @@ class ElasticServer:
         plan = self.fabric.plan(self._dst, self._src)
         # Padding slots (dst = -1) are dropped by design; only real slots
         # count as offered load, so offered - granted is the true drop
-        # tally.  The fabric owns the cumulative counters.
-        self.fabric.account(plan)
+        # tally.  The fabric owns the cumulative counters; passing the
+        # source vector keys drops/masks to their originating port
+        # (server traffic originates at the host bridge).
+        self.fabric.account(plan, self._src)
 
     def step(self) -> List[StreamCompletion]:
         """One server tick: admit, then one decode token per active slot."""
@@ -632,6 +645,20 @@ class ServerPool:
     @property
     def granted_packets(self) -> int:
         return sum(int(s.granted_packets) for s in self.servers)
+
+    @property
+    def masked_by_src(self) -> np.ndarray:
+        total = self.servers[0].masked_by_src.copy()
+        for srv in self.servers[1:]:
+            total = total + srv.masked_by_src
+        return total
+
+    @property
+    def dropped_by_src(self) -> np.ndarray:
+        total = self.servers[0].dropped_by_src.copy()
+        for srv in self.servers[1:]:
+            total = total + srv.dropped_by_src
+        return total
 
     @property
     def fabric_traces(self) -> int:

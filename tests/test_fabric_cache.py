@@ -459,3 +459,85 @@ print("ROUTE_OK")
     res = run_with_devices(code)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "ROUTE_OK" in res.stdout
+
+
+# ----------------------------------------------------------------------
+# adversarial epoch storms (ISSUE 9): hostile offers x rapid Shell.post
+# ----------------------------------------------------------------------
+class TestAdversarialEpochStorms:
+    """A ``dest_sprayer`` driving rapid ``Shell.post`` storms never gets
+    a stale cache hit: after every applied reconfiguration the cached
+    plan for the standing hostile offer is a fresh entry that agrees with
+    the uncached oracle bit-for-bit, every sprayed packet stays masked
+    under the new register file, and the whole storm costs zero
+    retraces."""
+
+    def hostile_offer(self, shell, atk, rng):
+        """One seam-generated spray, aimed at the live topology."""
+        from repro.manager.adversary import AttackView
+
+        t = shell.state.find_tenant("b")
+        ports = t.placed_ports if t is not None else ()
+        view = AttackView(
+            tick=0, app_id=1, name="b", host_port=shell.state.host_port,
+            my_ports=ports, n_ports=shell.state.n_ports, capacity=8,
+            healthy_rids=tuple(r.rid for r in shell.state.regions
+                               if r.healthy),
+            utilization=shell.utilization())
+        actions = atk.step(view, rng)
+        dsts = (actions[0].dsts if actions
+                else (shell.state.n_ports + 1,) * 8)   # evicted: wild spray
+        dst = jnp.asarray(dsts, jnp.int32)
+        src = jnp.full(dst.shape, ports[0] if ports else 1, jnp.int32)
+        return dst, src
+
+    def check_spray_storm(self, seed, op_indices):
+        from repro.manager.adversary import DestSprayer
+
+        shell = make_shell()
+        shell.submit("a", [fp(2), fp(2)], app_id=0)
+        shell.submit("b", [fp(2)], app_id=1)
+        cached = shell.fabric(plan_cache=True, capacity=8)
+        oracle = shell.fabric(plan_cache=False, capacity=8)
+        rng = np.random.default_rng(seed)
+        atk = DestSprayer(burst=8)
+        ops = [TestFabricPlanCache.OPS[i] for i in op_indices]
+
+        dst, src = self.hostile_offer(shell, atk, rng)
+        warm = cached.plan(dst, src)
+        assert cached.plan(dst, src) is warm
+        for label, op in ops:
+            epoch_before = shell.epoch
+            try:
+                op(shell)
+            except Exception:
+                # rejected post: epoch unchanged, warm entry must survive
+                assert shell.epoch == epoch_before, label
+                assert cached.plan(dst, src) is warm, label
+                continue
+            # the standing hostile offer re-plans fresh under the new epoch
+            plan = cached.plan(dst, src)
+            assert plan is not warm, f"{label}: stale entry served"
+            assert_plans_equal(plan, oracle.plan(dst, src), label)
+            # a new spray aimed at the reconfigured topology agrees too,
+            # and every sprayed packet is masked (never its own port, the
+            # host, or a same-tenant destination)
+            dst, src = self.hostile_offer(shell, atk, rng)
+            warm = cached.plan(dst, src)
+            assert_plans_equal(warm, oracle.plan(dst, src), label)
+            assert not np.asarray(warm.keep).any(), label
+            assert cached.plan(dst, src) is warm, label
+        assert cached.trace_counts["plan"] == 1
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_spray_storm_numpy_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        self.check_spray_storm(
+            seed, rng.integers(0, len(TestFabricPlanCache.OPS), 5).tolist())
+
+    if HAVE_HYPOTHESIS:
+        @given(st.integers(0, 2 ** 16),
+               st.lists(st.integers(0, 5), min_size=1, max_size=5))
+        @settings(max_examples=10, deadline=None)
+        def test_spray_storm_hypothesis(self, seed, ops):
+            self.check_spray_storm(seed, ops)

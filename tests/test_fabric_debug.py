@@ -277,3 +277,86 @@ print("SHARDED-DEBUG-OK")
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr
     assert "SHARDED-DEBUG-OK" in proc.stdout
+
+
+def test_sharded_dest_sprayer_strict_vs_masked_on_forced_mesh():
+    """ISSUE 9 satellite: seam-generated ``dest_sprayer`` traffic on the
+    sharded backend raises under ``debug="strict"`` but is masked
+    bit-identically to the debug-off build in normal mode, with every
+    sprayed packet accounted as a drop."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental import checkify
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.registers import CrossbarRegisters
+from repro.fabric import Fabric
+from repro.manager.adversary import AttackView, DestSprayer
+
+mesh = Mesh(np.array(jax.devices()), ("x",))
+regs = (CrossbarRegisters.create(4, capacity=4)
+        .with_isolation(1, [0, 1])
+        .with_isolation(2, [0, 2, 3])
+        .with_isolation(3, [0, 2, 3]))
+strict = Fabric(regs, backend="sharded", axis_name="x", capacity=4,
+                debug=True)
+plain = Fabric(regs, backend="sharded", axis_name="x", capacity=4,
+               debug=False)
+
+rng = np.random.default_rng(1)
+view = AttackView(tick=0, app_id=7, name="mal", host_port=0, my_ports=(1,),
+                  n_ports=4, capacity=4, healthy_rids=(0, 1, 2),
+                  utilization=0.9)
+(action,) = DestSprayer(burst=2).step(view, rng)
+
+honest = jnp.asarray([0, 0, 1, 1, 2, 2, 3, 3], jnp.int32)
+spray = honest.at[2].set(int(action.dsts[0])).at[3].set(int(action.dsts[1]))
+src = jnp.repeat(jnp.arange(4, dtype=jnp.int32), 2)
+x = jnp.arange(8 * 8, dtype=jnp.float32).reshape(8, 8)
+
+def body(fab):
+    def inner(r, xx, d, s):
+        y, plan = fab.transfer(xx, d, s, registers=r)
+        return y, plan.keep, plan.error, plan.drops
+    return inner
+
+kw = dict(mesh=mesh, in_specs=(P(), P("x"), P("x"), P("x")),
+          out_specs=(P("x"), P("x"), P("x"), P()))
+run_strict = checkify.checkify(
+    jax.jit(shard_map(body(strict), check_rep=False, **kw)))
+run_plain = jax.jit(shard_map(body(plain), **kw))
+
+err, _ = run_strict(regs, x, honest, src)
+assert err.get() is None, err.get()          # clean traffic passes strict
+
+err, _ = run_strict(regs, x, spray, src)     # the sprayer raises
+assert err.get() and "invalid destination" in err.get(), err.get()
+
+# normal mode: masked, bit-identical under a second debug-off build
+plain2 = Fabric(regs, backend="sharded", axis_name="x", capacity=4,
+                debug=False)
+run_plain2 = jax.jit(shard_map(body(plain2), **kw))
+y0, keep0, err0, drops0 = run_plain(regs, x, spray, src)
+y1, keep1, err1, drops1 = run_plain2(regs, x, spray, src)
+for a, b in ((y0, y1), (keep0, keep1), (err0, err1), (drops0, drops1)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+keep = np.asarray(keep0)
+assert not keep[2:4].any()                   # both sprayed packets masked
+assert (np.asarray(err0)[2:4] == 1).all()    # INVALID_DEST
+assert keep[[0, 1, 4, 5, 6, 7]].all()        # honest grants untouched
+drops = np.asarray(drops0)
+assert int(drops[1]) == 2                    # both sprays in the
+                                             # INVALID_DEST bucket
+assert int(drops.sum()) == 8                 # every row accounted
+assert np.allclose(np.asarray(y0)[2:4], 0.0) # attacker reads zeros
+print("SHARDED-SPRAYER-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop(DEBUG_ENV_VAR, None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "SHARDED-SPRAYER-OK" in proc.stdout

@@ -39,8 +39,12 @@ and the reconfiguration storm must keep ``fabric_retraces`` at 1.
 within-file (seeded counting metrics, so machine-neutral too): every
 ``slo_compare`` row must show the predictive policy with zero
 forecastable violations and strictly fewer violation ticks than the
-reactive baseline on the same seed, and the ``trace_replay`` row must be
-bit-identical with ``fabric_retraces`` pinned at 1.
+reactive baseline on the same seed, the ``trace_replay`` row must be
+bit-identical with ``fabric_retraces`` pinned at 1, and every
+``isolation`` row must keep honest-tenant admission p99 under attack
+within ``p99_bound`` of its quiet twin, charge masked packets only to
+attacker-owned source ports, and hold ``fabric_retraces`` at 1 through
+the attack.
 """
 from __future__ import annotations
 
@@ -156,12 +160,18 @@ def check_manager(manager_json: Path) -> list[str]:
       reactive baseline on the same seed (<= when the baseline already
       has none), and both runs must hold ``fabric_retraces`` at 1;
     - ``trace_replay`` rows: record -> replay must be bit-identical with
-      ``fabric_retraces`` at 1 on both sides.
+      ``fabric_retraces`` at 1 on both sides;
+    - ``isolation`` rows: honest-tenant admission p99 under attack <=
+      ``p99_bound`` x the quiet twin's (floored at 1 tick), masked
+      packets charged to attacker source ports only (``masked_honest_src
+      == 0``, ``masked_attacker_src > 0``), and ``fabric_retraces`` at 1
+      in both the quiet and the attack run.
     Returns failure tags; a file with none of these rows fails too — the
     bench not producing its gated rows is itself a regression."""
     failures = []
     rows = json.loads(manager_json.read_text()).get("rows", [])
     gated = 0
+    isolation = 0
     for row in rows:
         mode = row.get("mode")
         if mode == "slo_compare":
@@ -200,9 +210,43 @@ def check_manager(manager_json: Path) -> list[str]:
                 failures.append("manager trace_replay retraces")
             print(f"  manager trace_replay: bit_identical={identical}, "
                   f"retraces={retraces} {verdict}")
+        elif mode == "isolation":
+            gated += 1
+            isolation += 1
+            tag = f"manager isolation seed={row.get('seed')}"
+            quiet_p99 = float(row.get("honest_p99_quiet", -1.0))
+            attack_p99 = float(row.get("honest_p99_attack", -1.0))
+            bound = float(row.get("p99_bound", 0.0))
+            limit = bound * max(quiet_p99, 1.0)
+            masked_atk = int(row.get("masked_attacker_src", -1))
+            masked_honest = int(row.get("masked_honest_src", -1))
+            retraces = (int(row.get("quiet_retraces", -1)),
+                        int(row.get("attack_retraces", -1)))
+            verdict = "ok"
+            if attack_p99 < 0 or quiet_p99 < 0 or attack_p99 > limit:
+                verdict = "FAIL (honest p99 blew the bound)"
+                failures.append(tag + " p99")
+            if masked_atk <= 0:
+                verdict = "FAIL (attack left no attributed masking)"
+                failures.append(tag + " masked_attacker_src")
+            if masked_honest != 0:
+                verdict = "FAIL (honest port charged for the attack)"
+                failures.append(tag + " masked_honest_src")
+            if retraces != (1, 1):
+                verdict = "FAIL (retraced)"
+                failures.append(tag + " retraces")
+            print(f"  {tag}: honest p99 quiet={quiet_p99} "
+                  f"attack={attack_p99} (limit {limit}), "
+                  f"masked attacker={masked_atk} honest={masked_honest}, "
+                  f"retraces={retraces} {verdict}")
     if gated == 0:
         print(f"  manager: no gated rows in {manager_json} FAIL")
         failures.append("manager rows missing")
+    elif isolation == 0 and gated > 1:
+        # A full trajectory (several gated rows) that stopped emitting
+        # its isolation rows silently lost the adversarial coverage.
+        print(f"  manager: no isolation rows in {manager_json} FAIL")
+        failures.append("manager isolation rows missing")
     return failures
 
 

@@ -576,6 +576,8 @@ _SEAM_REGISTRIES = {
                             "forecast", ["series", "horizon"]),
     "_TRACKERS": ("tracker", "Tracker", "log", ["metrics", "step"]),
     "register_tracker": ("tracker", "Tracker", "log", ["metrics", "step"]),
+    "_ATTACKERS": ("attacker", "Attacker", "step", ["view", "rng"]),
+    "register_attacker": ("attacker", "Attacker", "step", ["view", "rng"]),
 }
 
 
