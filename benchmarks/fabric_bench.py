@@ -83,6 +83,33 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
             "bit_identical_to_plain": bool(
                 np.array_equal(np.asarray(y_plain), np.asarray(y_off))),
         })
+        # Backward-at-gather-cost guard row: grad of the transfer round
+        # trip rides the custom VJP (backward = gather/scatter-add over
+        # the same flat address route), so a full value_and_grad must
+        # price like a small multiple of the forward — NOT like a dense
+        # [T, S*C] routing matmul — and its compiled HLO must contain no
+        # [T, n_ports*CAPACITY]-sized intermediate.  Both are within-file
+        # (machine-neutral); check_bench_regression.py gates them.
+        from repro.launch.roofline import dense_routing_bytes
+
+        probe = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+
+        def tloss(xx, d, s, f=plain, p=probe):
+            return jnp.sum(f.transfer(xx, d, s)[0] * p)
+
+        grad_fn = jax.jit(jax.value_and_grad(tloss))
+        fwd_us = time_us(
+            lambda xx, d, s, f=plain: f.transfer(xx, d, s)[0], x, dst, src)
+        grad_us = time_us(grad_fn, x, dst, src)
+        hlo = grad_fn.lower(x, dst, src).compile().as_text()
+        rows.append({
+            "backend": "bwd_vs_fwd", "T": T, "n_ports": n_ports, "D": D,
+            "forward_us": round(fwd_us, 1),
+            "grad_us": round(grad_us, 1),
+            "bwd_vs_fwd": round(grad_us / fwd_us, 3),
+            "bwd_dense_routing_bytes": dense_routing_bytes(
+                hlo, T, n_ports * CAPACITY),
+        })
     claims = {
         "note": ("CPU wall time (pallas in interpret mode); the trajectory "
                  "tracks relative backend cost, TPU perf is the roofline's "
@@ -95,5 +122,10 @@ def bench_fabric() -> Tuple[List[dict], Dict[str, str]]:
                             "reference backend; overhead_ratio ~1.0 and "
                             "bit-identical outputs prove the checkify "
                             "sanitizer costs nothing when off"),
+        "bwd_vs_fwd": ("value_and_grad of the transfer round trip vs its "
+                       "forward, reference backend; the custom VJP keeps "
+                       "the backward address-routed, so the ratio stays a "
+                       "small multiple of 1 and bwd_dense_routing_bytes "
+                       "is 0 — no dense [T, S*C] tensor in the grad HLO"),
     }
     return rows, claims

@@ -27,6 +27,8 @@ D, D_FF = 32, 64
 TOP_K = 2
 CAPACITY_FACTOR = 2.0                    # ample: all impls agree exactly
 IMPLS = ["dense", "gather", "reference", "pallas"]
+GRAD_SHAPE = (512, 8)                    # (T, E) for the train-grad rows
+GRAD_IMPLS = ["gather", "dense", "reference", "pallas"]
 N_SHARDS = 4
 
 _SHARDED_CODE = """
@@ -88,6 +90,78 @@ def _sharded_rows() -> Tuple[List[dict], str]:
     return rows, f"forced {N_SHARDS}-device CPU topology (subprocess)"
 
 
+def _train_grad_rows() -> List[dict]:
+    """Backward-pass rows: one optimizer-style grad per dispatch impl at
+    ``GRAD_SHAPE``.  The fabric-routed grad rides the custom VJP (backward
+    replays the flat ``dst*C+slot`` address route), so it must price like
+    the inline-gather grad, not like the dense one-hot grad — the CI gate
+    reads ``vs_gather_grad`` within this file (machine-neutral) and pins
+    ``bwd_dense_routing_bytes == 0``: the compiled backward HLO contains
+    no [T*k, E*C]-sized routing intermediate (the dense rows show the
+    detector firing on the formulation that does materialize one)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.roofline import dense_routing_bytes
+    from repro.models.common import init_params
+    from repro.models.config import MoEConfig
+    from repro.models.moe import expert_capacity, moe_apply, moe_defs
+
+    T, E = GRAD_SHAPE
+    moe = MoEConfig(n_experts=E, top_k=TOP_K,
+                    capacity_factor=CAPACITY_FACTOR)
+    params = init_params(moe_defs(D, D_FF, moe, "swiglu"),
+                         jax.random.key(0), jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (8, T // 8, D))
+    cap = expert_capacity(T, moe)
+
+    def loss(p, xx, impl):
+        y, stats = moe_apply(p, xx, moe, "swiglu", group_size=T,
+                             dispatch_impl=impl)
+        return jnp.sum(y * y) + stats["aux_loss"]
+
+    rows: List[dict] = []
+    base = None
+    for impl in GRAD_IMPLS:
+        fwd = jax.jit(functools.partial(
+            lambda p, xx, i: loss(p, xx, i), i=impl))
+        fn = jax.jit(functools.partial(
+            lambda p, xx, i: jax.grad(loss)(p, xx, i), i=impl))
+        fwd_us = time_us(fwd, params, x)
+        us = time_us(fn, params, x)
+        hlo = fn.lower(params, x).compile().as_text()
+        grads = jax.tree.leaves(fn(params, x))
+        if base is None:
+            base = grads                 # first impl (gather) is the probe
+        agrees = all(np.allclose(np.asarray(g), np.asarray(b),
+                                 rtol=2e-4, atol=2e-5)
+                     for g, b in zip(grads, base))
+        rows.append({
+            "mode": "train_grad", "impl": impl, "T": T, "E": E, "d": D,
+            "forward_loss_us": round(fwd_us, 1),
+            "grad_us": round(us, 1),
+            "tokens_per_s": round(T / (us * 1e-6)),
+            # packet count is T * top_k: each token is routed k times
+            "bwd_dense_routing_bytes": dense_routing_bytes(
+                hlo, T * TOP_K, E * cap),
+            "grad_agrees": agrees,
+        })
+    gfloor = next(r["grad_us"] for r in rows if r["impl"] == "gather")
+    ffloor = next(r["forward_loss_us"] for r in rows
+                  if r["impl"] == "gather")
+    for r in rows:
+        r["vs_gather_grad"] = round(r["grad_us"] / gfloor, 3)
+        r["vs_gather_fwd"] = round(r["forward_loss_us"] / ffloor, 3)
+        # The gated claim: whatever forward overhead an impl carries
+        # (WRR plan arbitration, interpret-mode kernels), its *backward*
+        # adds none on top — grad ratio stays within the forward ratio.
+        r["bwd_overhead"] = round(r["vs_gather_grad"]
+                                  / max(r["vs_gather_fwd"], 1e-9), 3)
+    return rows
+
+
 def bench_moe() -> Tuple[List[dict], Dict[str, str]]:
     import jax
     import jax.numpy as jnp
@@ -121,13 +195,14 @@ def bench_moe() -> Tuple[List[dict], Dict[str, str]]:
             })
     sharded, sharded_note = _sharded_rows()
     rows.extend(sharded)
+    rows.extend(_train_grad_rows())
     # Gather-relative cost per (T, E): the inline gather baseline is the
     # floor a fabric-routed impl should approach — the CI gate reads this.
     gather_us = {(r["T"], r["E"]): r["forward_us"] for r in rows
-                 if r["impl"] == "gather"}
+                 if r["impl"] == "gather" and "forward_us" in r}
     for r in rows:
         floor = gather_us.get((r["T"], r["E"]))
-        if floor:
+        if floor and "forward_us" in r:
             r["vs_gather"] = round(r["forward_us"] / floor, 2)
     claims = {
         "note": ("CPU wall time (pallas in interpret mode); ample "
@@ -135,6 +210,14 @@ def bench_moe() -> Tuple[List[dict], Dict[str, str]]:
         "timing": "warmup + median of 5 device-synced samples",
         "vs_gather": ("forward_us relative to the inline gather baseline "
                       "at the same (T, E)"),
+        "train_grad": ("one jit(grad(loss)) step per dispatch impl at "
+                       f"(T, E)={GRAD_SHAPE}; the fabric-routed grad rides "
+                       "the custom VJP so bwd_overhead (grad-vs-gather "
+                       "normalized by the impl's own forward-vs-gather) "
+                       "must stay near 1.0 and bwd_dense_routing_bytes at "
+                       "0 (no dense [T*k, E*C] routing tensor in the "
+                       "backward HLO) — gated by "
+                       "tools/check_bench_regression.py --moe-json"),
         "device_count": str(jax.device_count()),
         "sharded": sharded_note,
     }

@@ -34,6 +34,7 @@ oracle for the ``crossbar_dispatch`` Pallas kernels.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -167,16 +168,51 @@ def flat_slot_addr(plan: DispatchPlan, n_ports: int,
                      jnp.int32(n_ports * capacity))
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def dispatch_at(x: jax.Array, daddr: jax.Array, n_ports: int,
                 capacity: int) -> jax.Array:
     """Scatter packets [T, D] into destination slabs at precomputed flat
     addresses (``daddr = flat_slot_addr(plan, ...)``).  The address-vector
     half of :func:`dispatch`, split out so the fabric's epoch-keyed plan
-    cache can reuse a memoized ``daddr`` across steady-state ticks."""
+    cache can reuse a memoized ``daddr`` across steady-state ticks.
+
+    Carries a custom VJP: a plan-gated scatter transposes to a **gather
+    over the same flat address vector** (pad the cotangent slab with one
+    zero trash row, ``jnp.take`` at ``daddr``), so the backward pass is
+    O(T·D) address-routed work — no dense [T, S*C] routing matrix — and a
+    cached ``daddr`` is replayed by both directions."""
     T, D = x.shape
     slab = jnp.zeros((n_ports * capacity + 1, D),
                      x.dtype).at[daddr].add(x)  # fablint: trash-row
     return slab[:n_ports * capacity].reshape(n_ports, capacity, D)
+
+
+def _dispatch_at_fwd(x, daddr, n_ports, capacity):
+    return dispatch_at(x, daddr, n_ports, capacity), daddr
+
+
+def _dispatch_at_bwd(n_ports, capacity, daddr, g):
+    # Transpose of the scatter: re-append the trash row the forward sliced
+    # off (dropped packets read it and get an exactly-zero cotangent), then
+    # gather each packet's slab row back at the *same* flat address.
+    D = g.shape[-1]
+    gf = jnp.concatenate(
+        [g.reshape(n_ports * capacity, D), jnp.zeros((1, D), g.dtype)],
+        axis=0)
+    return jnp.take(gf, daddr, axis=0, mode="clip"), None
+
+
+dispatch_at.defvjp(_dispatch_at_fwd, _dispatch_at_bwd)
+
+
+def dispatch_at_bwd_ref(g: jax.Array, daddr: jax.Array, n_ports: int,
+                        capacity: int) -> jax.Array:
+    """Dense one-hot oracle for the :func:`dispatch_at` backward rule (an
+    explicit [T, S*C] routing matrix — test-only, the thing the custom VJP
+    exists to avoid materializing)."""
+    rows = n_ports * capacity
+    oh = (daddr[:, None] == jnp.arange(rows)[None, :]).astype(g.dtype)
+    return jnp.einsum("tr,rd->td", oh, g.reshape(rows, -1))
 
 
 def dispatch(x: jax.Array, plan: DispatchPlan, n_ports: int,
@@ -202,14 +238,60 @@ def combine_addr(plan: DispatchPlan, n_ports: int,
     return addr, ok
 
 
+@jax.custom_vjp
 def combine_at(y: jax.Array, caddr: jax.Array, cmask: jax.Array,
                weights: jax.Array) -> jax.Array:
     """Gather result-slab rows at precomputed addresses back to packet
     order, masking dropped packets to zero (``caddr``/``cmask`` from
-    :func:`combine_addr` for a [S, C, D] slab of matching shape)."""
+    :func:`combine_addr` for a [S, C, D] slab of matching shape).
+
+    Carries a custom VJP mirroring :func:`dispatch_at`'s: the gather
+    transposes to a scatter-add over the same ``caddr`` route (masked
+    packets go to a trash row, so they contribute exactly zero), and the
+    weight cotangent is a row dot against the already-gathered rows —
+    both O(T·D), no dense routing matrix."""
     S, C, D = y.shape
     out = jnp.take(y.reshape(S * C, D), caddr, axis=0, mode="clip")
     return out * (cmask.astype(y.dtype) * weights)[:, None]
+
+
+def _combine_at_fwd(y, caddr, cmask, weights):
+    return combine_at(y, caddr, cmask, weights), (y, caddr, cmask, weights)
+
+
+def _combine_at_bwd(res, g):
+    y, caddr, cmask, weights = res
+    S, C, D = y.shape
+    gw = g * (cmask.astype(g.dtype) * weights)[:, None]
+    # Scatter the weighted cotangent back along the gather route; masked
+    # packets route to the trash row so their (already-zero) contribution
+    # never touches a live slab row.
+    addr = jnp.where(cmask, caddr, jnp.int32(S * C))
+    d_flat = jnp.zeros((S * C + 1, D), y.dtype).at[addr].add(
+        gw.astype(y.dtype))  # fablint: trash-row
+    d_y = d_flat[:S * C].reshape(S, C, D)
+    rows = jnp.take(y.reshape(S * C, D), caddr, axis=0, mode="clip")
+    d_w = (jnp.sum(g * rows, axis=-1)
+           * cmask.astype(g.dtype)).astype(weights.dtype)
+    return d_y, None, None, d_w
+
+
+combine_at.defvjp(_combine_at_fwd, _combine_at_bwd)
+
+
+def combine_at_bwd_ref(g: jax.Array, y: jax.Array, caddr: jax.Array,
+                       cmask: jax.Array,
+                       weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dense one-hot oracle for the :func:`combine_at` backward rule
+    (explicit [T, S*C] routing matrix — test-only)."""
+    S, C, D = y.shape
+    rows = S * C
+    oh = (caddr[:, None] == jnp.arange(rows)[None, :]).astype(g.dtype)
+    oh = oh * cmask.astype(g.dtype)[:, None]
+    d_y = jnp.einsum("tr,td->rd", oh, g * weights[:, None].astype(g.dtype))
+    d_w = jnp.einsum("td,td->t", g,
+                     jnp.einsum("tr,rd->td", oh, y.reshape(rows, D)))
+    return d_y.reshape(S, C, D).astype(y.dtype), d_w.astype(weights.dtype)
 
 
 def combine(y: jax.Array, plan: DispatchPlan, weights: jax.Array) -> jax.Array:

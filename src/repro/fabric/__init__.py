@@ -26,10 +26,13 @@ from repro.fabric.backends import (CombineRoute,                # noqa: F401
 from repro.fabric.cache import PlanCache, plan_key              # noqa: F401
 from repro.fabric.fabric import (DEBUG_ENV_VAR, Fabric,         # noqa: F401
                                  fabric_for_shell)
+from repro.fabric.interface import (KernelMode,                 # noqa: F401
+                                    resolve_kernel_mode)
 
 __all__ = [
     "Fabric", "fabric_for_shell", "DispatchPlan", "DEBUG_ENV_VAR",
     "PlanCache", "plan_key", "CombineRoute",
+    "KernelMode", "resolve_kernel_mode",
     "ReferenceBackend", "PallasBackend", "ShardedBackend",
     "get_backend", "register_fabric_backend", "backend_names",
 ]

@@ -52,6 +52,7 @@ register rewrite re-routes traffic through already-compiled dispatch code.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, Optional
 
 import jax
@@ -60,6 +61,7 @@ import jax.numpy as jnp
 from repro.core import arbiter
 from repro.core.arbiter import DispatchPlan, wrr_slots
 from repro.core.registers import CrossbarRegisters, ErrorCode
+from repro.fabric.interface import KernelMode
 
 
 def _empty_plan(dst: jax.Array, n_ports: int) -> DispatchPlan:
@@ -130,20 +132,43 @@ class PallasBackend:
 
     def __init__(self, *, block_t: int = 256,
                  interpret: Optional[bool] = None,
-                 data_plane: str = "scatter"):
+                 data_plane: str = "scatter",
+                 kernel_mode: Optional[KernelMode] = None):
         if data_plane not in ("scatter", "kernel"):
             raise ValueError(f"data_plane must be 'scatter' or 'kernel', "
                              f"got {data_plane!r}")
         self.block_t = block_t
         self.interpret = interpret
         self.data_plane = data_plane
+        self.kernel_mode: Optional[KernelMode] = None
+        self._force_ref = False
+        if kernel_mode is not None:
+            self.apply_kernel_mode(kernel_mode)
+
+    def apply_kernel_mode(self, mode: KernelMode) -> None:
+        """Bind a resolved :class:`~repro.fabric.interface.KernelMode` —
+        called exactly once, by ``Fabric.__init__`` (or the constructor).
+
+        The mode decides the kernel *lowering* behind the unchanged
+        ``plan``/``dispatch``/``combine`` surface: ``PALLAS`` /
+        ``PALLAS_INTERPRET`` pin ``interpret`` for every pallas_call;
+        ``XLA`` routes the plan through its compiled ``lax.scan``
+        reference (bit-identical by the pinned kernel-vs-ref sweeps) and
+        the data plane through the shared scatter/gather.  An explicit
+        legacy ``interpret=`` wins over the mode — it is the narrower,
+        older contract."""
+        self.kernel_mode = mode
+        self._force_ref = mode is KernelMode.XLA
+        if self.interpret is None and mode.uses_pallas:
+            self.interpret = mode.interpret
 
     @property
     def uses_shared_scatter(self) -> bool:
         """True on the default scatter data plane (the fabric's plan cache
         may substitute memoized address vectors); the historical blockwise
-        MXU kernels move data their own way."""
-        return self.data_plane == "scatter"
+        MXU kernels move data their own way.  ``KernelMode.XLA`` forces
+        the shared path — it *is* the XLA lowering of the data plane."""
+        return self.data_plane == "scatter" or self._force_ref
 
     def plan(self, dst: jax.Array, src: jax.Array,
              regs: CrossbarRegisters) -> DispatchPlan:
@@ -163,7 +188,7 @@ class PallasBackend:
                        & ~regs.reset[None, :]).astype(jnp.int32)
         keep_pre, rank, err_pre, granted = _plan_multi(
             dst, src, allowed_eff, regs.quota.T, block_t=self.block_t,
-            interpret=self.interpret)
+            interpret=self.interpret, force_ref=self._force_ref)
         keep_pre = keep_pre > 0                              # iso & quota
 
         slot = wrr_slots(rank, granted, dstc, srcc[None, :])
@@ -180,7 +205,7 @@ class PallasBackend:
 
     def dispatch(self, x: jax.Array, plan: DispatchPlan,
                  regs: CrossbarRegisters, capacity: int) -> jax.Array:
-        if self.data_plane == "scatter":
+        if self.uses_shared_scatter:
             return arbiter.dispatch(x, plan, regs.n_ports, capacity)
         from repro.kernels.crossbar_dispatch.ops import \
             _dispatch as kernel_dispatch
@@ -191,7 +216,7 @@ class PallasBackend:
 
     def combine(self, y: jax.Array, plan: DispatchPlan,
                 weights: jax.Array) -> jax.Array:
-        if self.data_plane == "scatter":
+        if self.uses_shared_scatter:
             return arbiter.combine(y, plan, weights)
         from repro.kernels.crossbar_dispatch.ops import \
             _combine as kernel_combine
@@ -231,6 +256,169 @@ def _axis_size(axis_name: str) -> int:
     if fn is not None:
         return fn(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# ----------------------------------------------------------------------
+# sharded data movement with custom VJPs
+#
+# ``all_to_all(split_axis=0, concat_axis=0)`` is a self-inverse block
+# permutation, so the transpose of (scatter -> all_to_all -> sum) is
+# (broadcast -> the same all_to_all -> gather at the same flat address):
+# the backward pass rides the identical ICI route the forward memoized —
+# O(packets · D) bytes, no dense routing matrix, no slab all-gather.
+# ----------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sharded_dispatch_at(axis_name, geom, x, addr):
+    """Scatter local packets into the send slab at flat ``dst*C+slot``
+    addresses, ``all_to_all`` the per-shard blocks, and sum per-source
+    contributions into this shard's receive slabs [pps, C, D].
+    ``geom = (n_src, pps, capacity)`` — static, resolved outside.
+    Backward oracle: :func:`sharded_dispatch_at_bwd_ref`."""
+    n_src, pps, capacity = geom
+    n_dst = n_src * pps
+    D = x.shape[-1]
+    send = jnp.zeros((n_dst * capacity + 1, D),
+                     x.dtype).at[addr].add(x)  # fablint: trash-row
+    send = send[:n_dst * capacity].reshape(n_src, pps, capacity, D)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    return jnp.sum(recv, axis=0)                             # [pps, C, D]
+
+
+def _sharded_dispatch_at_fwd(axis_name, geom, x, addr):
+    return _sharded_dispatch_at(axis_name, geom, x, addr), addr
+
+
+def _sharded_dispatch_at_bwd(axis_name, geom, addr, g):
+    n_src, pps, capacity = geom
+    n_dst = n_src * pps
+    D = g.shape[-1]
+    # The forward's sum over sources broadcasts; the self-inverse
+    # all_to_all carries every destination shard's cotangent block home.
+    gb = jnp.broadcast_to(g[None], (n_src, pps, capacity, D))
+    back = jax.lax.all_to_all(gb, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    flat = jnp.concatenate(
+        [back.reshape(n_dst * capacity, D), jnp.zeros((1, D), g.dtype)],
+        axis=0)
+    return jnp.take(flat, addr, axis=0, mode="clip"), None
+
+
+_sharded_dispatch_at.defvjp(_sharded_dispatch_at_fwd,
+                            _sharded_dispatch_at_bwd)
+
+
+def sharded_dispatch_at_bwd_ref(axis_name, geom, g, addr):
+    """Dense one-hot oracle for the :func:`_sharded_dispatch_at` backward
+    (explicit [T, n_dst*C+1] routing matrix — test-only; must still run
+    inside the same ``shard_map``)."""
+    n_src, pps, capacity = geom
+    n_dst = n_src * pps
+    D = g.shape[-1]
+    gb = jnp.broadcast_to(g[None], (n_src, pps, capacity, D))
+    back = jax.lax.all_to_all(gb, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    flat = jnp.concatenate(
+        [back.reshape(n_dst * capacity, D), jnp.zeros((1, D), g.dtype)],
+        axis=0)
+    oh = (addr[:, None]
+          == jnp.arange(n_dst * capacity + 1)[None, :]).astype(g.dtype)
+    return jnp.einsum("tr,rd->td", oh, flat)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sharded_combine_at(axis_name, n_src, y, addr_recv, idx, gate,
+                        weights):
+    """Address-routed sharded combine over a prebuilt route: gather my
+    slab rows per requesting shard (``addr_recv``; -1 = empty lane),
+    ``all_to_all`` them home, and read each packet's lane at ``idx =
+    dshard * W + min(pos, W-1)`` gated by ``gate`` (the route's ``keep``).
+    Backward oracle: :func:`sharded_combine_at_bwd_ref`."""
+    pps, C, D = y.shape
+    W = addr_recv.shape[-1]
+    rows = jnp.take(y.reshape(pps * C, D), addr_recv, axis=0,
+                    mode="clip")
+    rows = rows * (addr_recv >= 0).astype(y.dtype)[..., None]
+    back = jax.lax.all_to_all(rows, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    flat = back.reshape(n_src * W, D)
+    out = jnp.take(flat, idx, axis=0, mode="clip")
+    return out * (gate.astype(y.dtype) * weights)[:, None]
+
+
+def _sharded_combine_at_fwd(axis_name, n_src, y, addr_recv, idx, gate,
+                            weights):
+    pps, C, D = y.shape
+    W = addr_recv.shape[-1]
+    rows = jnp.take(y.reshape(pps * C, D), addr_recv, axis=0,
+                    mode="clip")
+    rows = rows * (addr_recv >= 0).astype(y.dtype)[..., None]
+    back = jax.lax.all_to_all(rows, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    flat = back.reshape(n_src * W, D)
+    pre = jnp.take(flat, idx, axis=0, mode="clip")
+    out = pre * (gate.astype(y.dtype) * weights)[:, None]
+    return out, (y, pre, addr_recv, idx, gate, weights)
+
+
+def _sharded_combine_at_bwd(axis_name, n_src, res, g):
+    y, pre, addr_recv, idx, gate, weights = res
+    pps, C, _ = y.shape
+    y_dtype = y.dtype
+    W = addr_recv.shape[-1]
+    D = g.shape[-1]
+    gw = g * (gate.astype(g.dtype) * weights.astype(g.dtype))[:, None]
+    # Scatter each packet's weighted cotangent into its lane (dropped
+    # packets carry exact zeros and park in the trash lane row), ride the
+    # self-inverse all_to_all back to the owning shard, and scatter-add
+    # into its slab at the same served addresses.
+    lane = jnp.where(gate, idx, jnp.int32(n_src * W))
+    d_flat = jnp.zeros((n_src * W + 1, D), y_dtype).at[lane].add(
+        gw.astype(y_dtype))  # fablint: trash-row
+    d_back = d_flat[:n_src * W].reshape(n_src, W, D)
+    d_rows = jax.lax.all_to_all(d_back, axis_name, split_axis=0,
+                                concat_axis=0, tiled=False)
+    live = addr_recv >= 0
+    d_rows = d_rows * live.astype(y_dtype)[..., None]
+    raddr = jnp.where(live, addr_recv, jnp.int32(pps * C))
+    d_y = jnp.zeros((pps * C + 1, D), y_dtype).at[
+        raddr.reshape(-1)].add(
+        d_rows.reshape(-1, D))  # fablint: trash-row
+    d_y = d_y[:pps * C].reshape(pps, C, D)
+    d_w = (jnp.sum(g * pre.astype(g.dtype), axis=-1)
+           * gate.astype(g.dtype)).astype(weights.dtype)
+    return d_y, None, None, None, d_w
+
+
+_sharded_combine_at.defvjp(_sharded_combine_at_fwd,
+                           _sharded_combine_at_bwd)
+
+
+def sharded_combine_at_bwd_ref(axis_name, n_src, g, y, addr_recv, idx,
+                               gate, weights):
+    """Dense one-hot oracle for the :func:`_sharded_combine_at` backward
+    ((d_y, d_weights) via explicit routing matrices — test-only; must run
+    inside the same ``shard_map``)."""
+    pps, C, D = y.shape
+    W = addr_recv.shape[-1]
+    gf = g.astype(jnp.float32)
+    gw = gf * (gate.astype(jnp.float32) * weights.astype(jnp.float32))[:, None]
+    oh_lane = ((idx[:, None] == jnp.arange(n_src * W)[None, :])
+               & gate[:, None]).astype(jnp.float32)
+    d_back = jnp.einsum("tl,td->ld", oh_lane, gw).reshape(n_src, W, D)
+    d_rows = jax.lax.all_to_all(d_back, axis_name, split_axis=0,
+                                concat_axis=0, tiled=False)
+    oh_recv = ((addr_recv[..., None] == jnp.arange(pps * C)[None, None, :])
+               & (addr_recv >= 0)[..., None]).astype(jnp.float32)
+    d_y = jnp.einsum("swr,swd->rd", oh_recv, d_rows).reshape(pps, C, D)
+    rows = jnp.einsum("swr,rd->swd", oh_recv,
+                      y.reshape(pps * C, D).astype(jnp.float32))
+    back = jax.lax.all_to_all(rows, axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    pre = jnp.einsum("tl,ld->td", oh_lane,
+                     back.reshape(n_src * W, D))
+    d_w = jnp.sum(gf * pre, axis=-1)
+    return d_y.astype(y.dtype), d_w.astype(weights.dtype)
 
 
 class ShardedBackend:
@@ -319,14 +507,11 @@ class ShardedBackend:
         n_src = _axis_size(self.axis_name)
         n_dst = regs.n_ports
         pps = self.ports_per_shard(regs)
-        D = x.shape[-1]
         addr = arbiter.flat_slot_addr(plan, n_dst, capacity)
-        send = jnp.zeros((n_dst * capacity + 1, D),
-                         x.dtype).at[addr].add(x)  # fablint: trash-row
-        send = send[:n_dst * capacity].reshape(n_src, pps, capacity, D)
-        recv = jax.lax.all_to_all(send, self.axis_name, split_axis=0,
-                                  concat_axis=0, tiled=False)
-        return jnp.sum(recv, axis=0)                         # [P, C, D]
+        # The custom-VJP primitive replays the same flat address route in
+        # the backward pass (gather after the self-inverse all_to_all).
+        return _sharded_dispatch_at(self.axis_name, (n_src, pps, capacity),
+                                    x, addr)                 # [P, C, D]
 
     def build_route(self, plan: DispatchPlan,
                     capacity: int) -> CombineRoute:
@@ -396,20 +581,12 @@ class ShardedBackend:
         if route is None:
             route = self.build_route(plan, C)
         W = route.addr_recv.shape[-1]
-        # mode="clip" IS the old jnp.clip(addr_recv, 0, pps*C-1): -1 marks
-        # an empty lane row and clips to row 0, which the mask below zeros.
-        rows = jnp.take(y.reshape(pps * C, D), route.addr_recv, axis=0,
-                        mode="clip")
-        rows = rows * (route.addr_recv >= 0).astype(y.dtype)[..., None]
-        back = jax.lax.all_to_all(rows, ax, split_axis=0,
-                                  concat_axis=0, tiled=False)
-        flat = back.reshape(n_src * W, D)
         # In-range by construction (dshard < n_src, min(pos, W-1) < W);
-        # dropped packets read a garbage row that `keep` zeros right after.
-        out = jnp.take(flat,
-                       route.dshard * W + jnp.minimum(route.pos, W - 1),
-                       axis=0, mode="clip")
-        return out * (route.keep.astype(y.dtype) * weights)[:, None]
+        # dropped packets read a garbage row that ``keep`` zeros.  The
+        # custom-VJP primitive replays the identical lane route backward.
+        idx = route.dshard * W + jnp.minimum(route.pos, W - 1)
+        return _sharded_combine_at(ax, n_src, y, route.addr_recv, idx,
+                                   route.keep, weights)
 
 
 # ----------------------------------------------------------------------

@@ -147,6 +147,19 @@ class PlanCache:
         self.misses = 0
         self.invalidations = 0
 
+    def reset(self) -> None:
+        """Cold reset: drop every entry AND zero the counters (without
+        charging an invalidation — nothing was live to invalidate from
+        the next run's point of view).  This is the record→replay teardown:
+        ``reset_stats`` alone leaves entries warm, so a replayed scenario's
+        first offers would *hit* where the recorded run *missed* and its
+        ``plan_cache_hit_rate`` would diverge bit-from-bit from the
+        recording.  ``ElasticServer.reset(cold_cache=True)`` calls this."""
+        self._entries.clear()
+        self._by_plan_id.clear()
+        self._epoch = None
+        self.reset_stats()
+
     def stats(self) -> Dict[str, Any]:
         """Channel-shaped counters (``Fabric.probe()`` folds these into
         the manager's ``Signals``)."""

@@ -43,6 +43,7 @@ from repro.core.registers import CrossbarRegisters, ErrorCode
 from repro.fabric import sanitize
 from repro.fabric.backends import get_backend
 from repro.fabric.cache import PlanCache, plan_key
+from repro.fabric.interface import KernelMode, resolve_kernel_mode
 
 ApplyFn = Callable[[jax.Array], jax.Array]
 
@@ -126,12 +127,23 @@ class Fabric:
         suite pins this) and hit/miss/invalidation counters flow through
         ``probe()`` into ``Signals``.  Calls made inside a trace or with
         a ``registers=`` override always bypass the cache.
+    kernel_mode:
+        The kernel-lowering seam (:class:`repro.fabric.KernelMode`):
+        ``"auto"``/``None`` (pallas on TPU, XLA elsewhere — resolved once,
+        here), ``"xla"``, ``"pallas"``, or ``"pallas_interpret"``.  The
+        resolved mode is bound into the backend at construction so
+        real-TPU sweeps and ``launch/roofline.py`` select lowerings
+        without touching any ``plan``/``dispatch``/``combine``/
+        ``transfer`` call site; passing nothing keeps each backend's
+        historical defaults bit-for-bit.  See docs/training.md.
     """
 
     def __init__(self, registers, *, backend: Union[str, Any] = "reference",
                  capacity: Optional[int] = None,
                  debug: Optional[Union[bool, str]] = None,
-                 plan_cache: Union[bool, int, None] = False, **backend_kw):
+                 plan_cache: Union[bool, int, None] = False,
+                 kernel_mode: Union[str, KernelMode, None] = None,
+                 **backend_kw):
         if isinstance(registers, CrossbarRegisters):
             regs0 = registers
             self._regs_fn = lambda: regs0
@@ -151,6 +163,17 @@ class Fabric:
         else:
             raise TypeError(f"cannot bind fabric to {type(registers)!r}")
         self.backend = get_backend(backend, **backend_kw)
+        # ---- kernel-mode seam (repro.fabric.interface) -----------------
+        # Resolved exactly ONCE, here: "auto" probes the platform at
+        # construction, never inside a jitted call site, and the resolved
+        # mode is pushed into the backend (pallas derives its interpret
+        # flag / XLA-reference routing from it; the pure-XLA backends have
+        # nothing to bind).  Legacy string kwargs keep working — see
+        # docs/migration.md for the alias table.
+        self.kernel_mode = resolve_kernel_mode(kernel_mode)
+        bind_mode = getattr(self.backend, "apply_kernel_mode", None)
+        if bind_mode is not None and kernel_mode is not None:
+            bind_mode(self.kernel_mode)
         if capacity is None:
             capacity = int(np.max(np.asarray(self.registers.capacity)))
         self.capacity = int(capacity)
@@ -265,12 +288,19 @@ class Fabric:
         from repro.manager.telemetry import FabricProbe
         return FabricProbe(self)
 
-    def reset_accounting(self) -> None:
+    def reset_accounting(self, *, cold_cache: bool = False) -> None:
         """Zero every cumulative traffic counter (and the plan cache's
-        hit/miss/invalidation stats — entries stay warm) so a new
-        measurement window starts clean.  ``ElasticServer.reset`` calls
-        this; a fabric shared across scenarios must not leak one run's
-        ``port_traffic`` into the next run's first ``Signals`` window."""
+        hit/miss/invalidation stats — entries stay warm by default) so a
+        new measurement window starts clean.  ``ElasticServer.reset``
+        calls this; a fabric shared across scenarios must not leak one
+        run's ``port_traffic`` into the next run's first ``Signals``
+        window.
+
+        ``cold_cache=True`` additionally drops the memoized entries
+        (``PlanCache.reset``): the record→replay mode, where a replayed
+        scenario must observe the *same* hit/miss sequence the recording
+        did — warm entries would turn its first offers into hits and skew
+        ``plan_cache_hit_rate`` off the recorded value."""
         self.port_traffic = np.zeros_like(self.port_traffic)
         self.remote_port_traffic = np.zeros_like(self.remote_port_traffic)
         self.local_port_traffic = np.zeros_like(self.local_port_traffic)
@@ -281,7 +311,10 @@ class Fabric:
         self.remote_packets = 0
         self.local_packets = 0
         if self.plan_cache is not None:
-            self.plan_cache.reset_stats()
+            if cold_cache:
+                self.plan_cache.reset()
+            else:
+                self.plan_cache.reset_stats()
 
     def account(self, plan, src=None, *, src_shard: Optional[int] = None,
                 n_shards: Optional[int] = None) -> None:

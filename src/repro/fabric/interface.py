@@ -1,0 +1,112 @@
+"""Kernel-mode seam: one explicit enum picked at :class:`Fabric` construction.
+
+The fabric has always had *two* axes of configurability tangled into ad-hoc
+keyword arguments: which **backend** implements the crossbar semantics
+(``reference`` / ``pallas`` / ``sharded``) and which **kernel lowering** the
+pallas backend uses for its data plane (real Mosaic kernels, the Pallas
+interpreter, or the pure-XLA reference path).  Call sites ended up passing
+``interpret=`` booleans through several layers, and a real-TPU sweep had to
+edit every constructor to flip them.
+
+:class:`KernelMode` collapses the second axis into a single enum resolved
+**once** at ``Fabric`` construction (mirroring the ``KernelType`` seam in
+mamba-jax's ``kernels/interface.py``): callers say *what* they want
+(``"auto"`` / ``"xla"`` / ``"pallas"`` / ``"pallas_interpret"``) and the
+resolution to a concrete lowering happens in exactly one place —
+``launch/roofline.py`` sweeps and ``interpret=False`` TPU runs select kernels
+without touching the ``plan/dispatch/combine/transfer`` call sites.
+
+The legacy ``interpret=`` keyword keeps working and, when given explicitly,
+wins over the mode (it is the narrower, older contract); ``backend=`` strings
+are untouched — they name semantics, not lowerings.
+
+>>> resolve_kernel_mode(None) in (KernelMode.XLA, KernelMode.PALLAS)
+True
+>>> resolve_kernel_mode("pallas_interpret") is KernelMode.PALLAS_INTERPRET
+True
+>>> KernelMode.PALLAS_INTERPRET.interpret
+True
+"""
+from __future__ import annotations
+
+import enum
+from typing import Optional, Union
+
+
+class KernelMode(enum.Enum):
+    """How the fabric's data-plane kernels are lowered.
+
+    ======================  ====================================================
+    mode                    meaning
+    ======================  ====================================================
+    ``AUTO``                resolve at construction: ``PALLAS`` on TPU, else
+                            ``XLA`` (the only mode that inspects the platform)
+    ``XLA``                 pure-XLA lowering — the arbiter scatter/gather (or
+                            ``ref.py`` oracles for the kernel data plane);
+                            runs everywhere, differentiable everywhere
+    ``PALLAS``              real Mosaic/Triton kernels (``interpret=False``);
+                            requires an accelerator backend
+    ``PALLAS_INTERPRET``    Pallas interpreter mode — kernel *semantics* on
+                            CPU, for tests and local dev
+    ======================  ====================================================
+    """
+
+    AUTO = "auto"
+    XLA = "xla"
+    PALLAS = "pallas"
+    PALLAS_INTERPRET = "pallas_interpret"
+
+    @property
+    def interpret(self) -> bool:
+        """Whether pallas_call should run under the interpreter."""
+        return self is KernelMode.PALLAS_INTERPRET
+
+    @property
+    def uses_pallas(self) -> bool:
+        """Whether this mode lowers through pallas_call at all."""
+        return self in (KernelMode.PALLAS, KernelMode.PALLAS_INTERPRET)
+
+
+# Legacy spellings accepted anywhere a KernelMode is taken.  The old
+# ``backend="pallas"`` *semantics* strings are not aliased here — they keep
+# naming fabric backends; these cover the lowering-flavoured strings people
+# already pass around (docs/migration.md has the full table).
+_ALIASES = {
+    "auto": KernelMode.AUTO,
+    "xla": KernelMode.XLA,
+    "reference": KernelMode.XLA,      # "use the XLA reference lowering"
+    "ref": KernelMode.XLA,
+    "pallas": KernelMode.PALLAS,
+    "mosaic": KernelMode.PALLAS,
+    "pallas_interpret": KernelMode.PALLAS_INTERPRET,
+    "interpret": KernelMode.PALLAS_INTERPRET,
+}
+
+
+def resolve_kernel_mode(
+        mode: Optional[Union[str, KernelMode]]) -> KernelMode:
+    """Resolve a user-facing mode spec to a concrete :class:`KernelMode`.
+
+    ``None`` and ``"auto"`` pick ``PALLAS`` on TPU and ``XLA`` elsewhere —
+    the same platform probe the kernels' ``_should_interpret`` gate uses, but
+    run exactly once, at construction, so jitted call sites never branch on
+    it.  Strings resolve through the alias table; a concrete
+    :class:`KernelMode` other than ``AUTO`` passes through unchanged.
+    """
+    if mode is None:
+        mode = KernelMode.AUTO
+    if isinstance(mode, str):
+        try:
+            mode = _ALIASES[mode.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown kernel mode {mode!r}; expected one of "
+                f"{sorted(_ALIASES)} or a KernelMode") from None
+    if not isinstance(mode, KernelMode):
+        raise TypeError(f"expected str or KernelMode, got {type(mode)!r}")
+    if mode is KernelMode.AUTO:
+        import jax  # local: keep this module import-light for fablint/tools
+
+        mode = (KernelMode.PALLAS if jax.default_backend() == "tpu"
+                else KernelMode.XLA)
+    return mode

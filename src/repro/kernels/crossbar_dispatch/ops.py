@@ -17,6 +17,7 @@ special-casing downstream.
 """
 from __future__ import annotations
 
+import functools
 import warnings
 from typing import Tuple
 
@@ -71,7 +72,8 @@ def _plan(dst: jax.Array, allowed_row: jax.Array,
 
 def _plan_multi(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
                 quota_sd: jax.Array, *, block_t: int = 256,
-                interpret: bool | None = None):
+                interpret: bool | None = None,
+                force_ref: bool = False):
     """Fused grant decisions for ALL source regions' packets in one launch.
 
     dst/src [T] int32; ``allowed_sd``/``quota_sd`` [S, S] register matrices
@@ -85,7 +87,9 @@ def _plan_multi(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
     (``ref.plan_multi_ref`` — bit-identical outputs) instead of paying the
     pallas interpreter's per-op emulation; pass ``interpret=True``
     explicitly to force the kernel through the interpreter (the
-    kernel-vs-ref test sweeps do).
+    kernel-vs-ref test sweeps do).  ``force_ref=True`` pins the reference
+    sweep on every platform — the ``KernelMode.XLA`` lowering, so a TPU
+    run can opt out of Mosaic without editing call sites.
     """
     n_ports = allowed_sd.shape[0]
     if dst.shape[0] == 0:       # zero-packet round: nothing granted
@@ -94,7 +98,7 @@ def _plan_multi(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
     block_t = min(block_t, max(8, dst.shape[0]))
     dstp, T = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
     srcp, _ = _pad_tokens(src.astype(jnp.int32), block_t, 0)
-    if interpret is None and _should_interpret():
+    if force_ref or (interpret is None and _should_interpret()):
         from repro.kernels.crossbar_dispatch.ref import plan_multi_ref
         keep, rank, err, granted = plan_multi_ref(
             dstp, srcp, allowed_sd, quota_sd, block_t)
@@ -104,6 +108,42 @@ def _plan_multi(dst: jax.Array, src: jax.Array, allowed_sd: jax.Array,
             quota_sd.astype(jnp.int32), n_ports=n_ports, block_t=block_t,
             interpret=bool(interpret))
     return keep[:T], rank[:T], err[:T], granted
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _dispatch_core(x, dst, keep, slot, n_ports, capacity, block_t,
+                   interpret):
+    """pallas scatter with a hand-written VJP: ``pallas_call`` has no
+    transpose rule, so without this ``jax.grad`` through the kernel data
+    plane fails outright.  The backward is the plan-gated gather at the
+    same flat ``dst * capacity + slot`` address the kernel scattered to —
+    plain XLA (a backward kernel need not be pallas), O(T·D), no dense
+    [T, S*C] routing matrix.  Oracle: ``ref.dispatch_bwd_ref``."""
+    return _k.scatter_call(x, dst, keep, slot, n_ports=n_ports,
+                           capacity=capacity, block_t=block_t,
+                           interpret=interpret)
+
+
+def _dispatch_core_fwd(x, dst, keep, slot, n_ports, capacity, block_t,
+                       interpret):
+    out = _dispatch_core(x, dst, keep, slot, n_ports, capacity, block_t,
+                         interpret)
+    return out, (dst, keep, slot)
+
+
+def _dispatch_core_bwd(n_ports, capacity, block_t, interpret, res, g):
+    dst, keep, slot = res
+    ok = ((keep > 0) & (slot < capacity) & (dst >= 0) & (dst < n_ports))
+    addr = jnp.where(ok, jnp.clip(dst, 0, n_ports - 1) * capacity + slot,
+                     jnp.int32(n_ports * capacity))
+    D = g.shape[-1]
+    gf = jnp.concatenate(
+        [g.reshape(n_ports * capacity, D), jnp.zeros((1, D), g.dtype)],
+        axis=0)
+    return jnp.take(gf, addr, axis=0, mode="clip"), None, None, None
+
+
+_dispatch_core.defvjp(_dispatch_core_fwd, _dispatch_core_bwd)
 
 
 def _dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
@@ -120,9 +160,43 @@ def _dispatch(x: jax.Array, dst: jax.Array, keep: jax.Array,
     dstp, _ = _pad_tokens(dst.astype(jnp.int32), block_t, -1)
     keepp, _ = _pad_tokens(keep.astype(jnp.int32), block_t, 0)
     slotp, _ = _pad_tokens(slot.astype(jnp.int32), block_t, 0)
-    return _k.scatter_call(xp, dstp, keepp, slotp, n_ports=n_ports,
-                           capacity=capacity, block_t=block_t,
+    return _dispatch_core(xp, dstp, keepp, slotp, n_ports, capacity,
+                          block_t, bool(interpret))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _combine_core(y, dst, keep, slot, weights, block_t, interpret):
+    """pallas gather with a hand-written VJP (see ``_dispatch_core``): the
+    backward scatters the weighted cotangent back along the same flat
+    address route and dots the gathered rows for the weight cotangent.
+    Oracle: ``ref.combine_bwd_ref``."""
+    return _k.combine_call(y, dst, keep, slot, weights, block_t=block_t,
                            interpret=interpret)
+
+
+def _combine_core_fwd(y, dst, keep, slot, weights, block_t, interpret):
+    out = _combine_core(y, dst, keep, slot, weights, block_t, interpret)
+    return out, (y, dst, keep, slot, weights)
+
+
+def _combine_core_bwd(block_t, interpret, res, g):
+    y, dst, keep, slot, weights = res
+    S, C, D = y.shape
+    ok = ((keep > 0) & (slot < C) & (dst >= 0) & (dst < S))
+    addr = jnp.where(ok, jnp.clip(dst, 0, S - 1) * C + slot,
+                     jnp.int32(S * C))
+    okf = ok.astype(g.dtype)
+    gw = g * (okf * weights.astype(g.dtype))[:, None]
+    d_flat = jnp.zeros((S * C + 1, D), y.dtype).at[addr].add(
+        gw.astype(y.dtype))  # fablint: trash-row
+    d_y = d_flat[:S * C].reshape(S, C, D)
+    rows = jnp.take(y.reshape(S * C, D), addr, axis=0, mode="clip")
+    d_w = (jnp.sum(g * rows.astype(g.dtype), axis=-1)
+           * okf).astype(weights.dtype)
+    return d_y, None, None, None, d_w
+
+
+_combine_core.defvjp(_combine_core_fwd, _combine_core_bwd)
 
 
 def _combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
@@ -140,8 +214,8 @@ def _combine(y: jax.Array, dst: jax.Array, keep: jax.Array,
     keepp, _ = _pad_tokens(keep.astype(jnp.int32), block_t, 0)
     slotp, _ = _pad_tokens(slot.astype(jnp.int32), block_t, 0)
     wp, _ = _pad_tokens(weights.astype(jnp.float32), block_t, 0)
-    out = _k.combine_call(y, dstp, keepp, slotp, wp, block_t=block_t,
-                          interpret=interpret)
+    out = _combine_core(y, dstp, keepp, slotp, wp, block_t,
+                        bool(interpret))
     return out[:T]
 
 

@@ -131,3 +131,46 @@ def combine_ref(y: jax.Array, dst: jax.Array, keep: jax.Array,
         * ((keep > 0).astype(jnp.float32) * weights)[:, None, None]
     return jnp.einsum("tsc,scd->td", sel,
                       y.astype(jnp.float32)).astype(y.dtype)
+
+
+# ----------------------------------------------------------------------
+# backward-rule oracles (dense one-hot transposes of scatter/combine —
+# what the custom VJPs in ops.py must equal without ever materializing
+# the [T, S*C] selection tensor these build)
+# ----------------------------------------------------------------------
+def _plan_sel(dst: jax.Array, keep: jax.Array, slot: jax.Array,
+              n_ports: int, capacity: int, dtype) -> jax.Array:
+    """[T, S, C] plan-gated selection tensor shared by the bwd oracles."""
+    dstv = dst.astype(jnp.int32)
+    ok = ((keep > 0) & (dstv >= 0) & (dstv < n_ports) & (slot < capacity))
+    dst_oh = jax.nn.one_hot(jnp.clip(dstv, 0, n_ports - 1), n_ports,
+                            dtype=dtype)
+    slot_oh = jax.nn.one_hot(slot, capacity, dtype=dtype)
+    return (dst_oh[:, :, None] * slot_oh[:, None, :]
+            * ok[:, None, None].astype(dtype))
+
+
+def dispatch_bwd_ref(g: jax.Array, dst: jax.Array, keep: jax.Array,
+                     slot: jax.Array, n_ports: int,
+                     capacity: int) -> jax.Array:
+    """Oracle for the ``_dispatch_core`` backward: transpose of the
+    plan-gated scatter is the plan-gated gather — d_x[t] reads the slab
+    cotangent row the packet scattered to (zero when dropped)."""
+    sel = _plan_sel(dst, keep, slot, n_ports, capacity, g.dtype)
+    return jnp.einsum("tsc,scd->td", sel, g)
+
+
+def combine_bwd_ref(g: jax.Array, y: jax.Array, dst: jax.Array,
+                    keep: jax.Array, slot: jax.Array, weights: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the ``_combine_core`` backward: (d_y, d_weights) of the
+    weighted gather — the weighted cotangent scattered back along the same
+    route, and a row dot for the weight cotangent."""
+    S, C, D = y.shape
+    sel = _plan_sel(dst, keep, slot, S, C, jnp.float32)
+    gf = g.astype(jnp.float32)
+    d_y = jnp.einsum("tsc,td->scd", sel,
+                     gf * weights.astype(jnp.float32)[:, None])
+    rows = jnp.einsum("tsc,scd->td", sel, y.astype(jnp.float32))
+    d_w = jnp.einsum("td,td->t", gf, rows)
+    return d_y.astype(y.dtype), d_w.astype(weights.dtype)

@@ -192,6 +192,54 @@ def model_flops_for(cfg, shape, n_params: int, n_active: Optional[int] = None
     return 2.0 * n * shape.global_batch          # decode: one token per seq
 
 
+def kernel_mode_for_target(platform: Optional[str] = None) -> str:
+    """Crossbar kernel mode for a roofline sweep cell on ``platform``.
+
+    TPU cells lower the real Mosaic crossbar (``interpret=False`` — the HLO
+    the sweep costs is the HLO the chip runs); every other target uses the
+    XLA scatter data plane, which lowers the *same* flat address route so
+    ``cost_analysis`` sees address-routed dispatch rather than an
+    interpreter stand-in.  Pass the result to ``build_step(kernel_mode=...)``
+    — call sites never branch on platform themselves.
+    """
+    import jax
+    plat = platform or jax.default_backend()
+    return "pallas" if plat == "tpu" else "xla"
+
+
+def dense_routing_bytes(hlo_text: str, tokens: int, ports_x_capacity: int,
+                        min_dtype_bytes: int = 2) -> int:
+    """Bytes of the largest [T, P*C]-sized intermediate found in ``hlo_text``.
+
+    The fabric's claim is that forward *and backward* route by flat address
+    — no dense [tokens, n_ports*capacity] selection tensor is ever
+    materialised (that tensor is the Mesh-TF one-hot formulation the
+    scatter path exists to avoid).  Bench gating calls this on the lowered
+    train-step HLO and asserts 0.  Returns the byte size of the worst
+    offender so failures are actionable.
+
+    A shape counts iff it has a ``tokens`` dim and its remaining dims
+    multiply to exactly ``ports_x_capacity`` — that matches every layout of
+    the selection tensor ([T,P*C], [T,P,C], [P,C,T], ...) while ordinary
+    activations ([T, d_model], [T, d_ff]) only collide if the probe
+    geometry makes a feature dim equal P*C (pick geometries that don't).
+    """
+    worst = 0
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES or _DTYPE_BYTES[dt] < min_dtype_bytes:
+            continue
+        sizes = [int(d) for d in dims.split(",") if d]
+        if tokens not in sizes:
+            continue
+        n = 1
+        for d in sizes:
+            n *= d
+        if n == tokens * ports_x_capacity:
+            worst = max(worst, n * _DTYPE_BYTES[dt])
+    return worst
+
+
 def extract(compiled, lowered=None) -> Tuple[float, float, Dict, Optional[float]]:
     """(flops, bytes, collectives, peak_mem) from a compiled artifact."""
     ca = compiled.cost_analysis()

@@ -89,8 +89,23 @@ def opt_state_specs(model: LMBase, multi_pod: bool) -> OptState:
 def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                *, multi_pod: bool, opt: Optional[AdamW] = None,
                microbatches: int = 1,
-               constrain_activations: bool = True) -> StepBundle:
+               constrain_activations: bool = True,
+               kernel_mode: Optional[str] = None) -> StepBundle:
+    """Build one (arch x shape) cell.
+
+    ``kernel_mode`` overrides ``cfg.moe.kernel_mode`` for MoE archs — the
+    seam sweeps use to lower the same train step against different crossbar
+    kernels ("xla" | "pallas" | "pallas_interpret") without editing model
+    configs or any call site below this one.  MoE train cells backprop
+    through the fabric: ``jax.value_and_grad(model.loss)`` hits the
+    custom_vjp scatter/gather rules, so the lowered backward replays the
+    flat address route instead of a dense [T, E*C] selection matmul.
+    """
     from repro.models.lm import batch_axes
+    if (kernel_mode is not None and cfg.moe is not None
+            and kernel_mode != cfg.moe.kernel_mode):
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, kernel_mode=kernel_mode))
     model = build_model(cfg)
     if constrain_activations:
         # Pin [B, S, d] activations to batch sharding at every layer

@@ -21,6 +21,11 @@ class MoEConfig:
     # routes groups through Fabric.transfer, sharing the shell's
     # interconnect implementation.
     dispatch: str = "dense"
+    # Kernel-lowering seam for the fabric-backed dispatch impls
+    # (repro.fabric.KernelMode aliases: "auto" | "xla" | "pallas" |
+    # "pallas_interpret").  Resolved once when the geometry's fabric is
+    # built; ignored by "dense"/"gather".  See docs/training.md.
+    kernel_mode: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

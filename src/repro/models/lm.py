@@ -309,7 +309,8 @@ class DenseLM(LMBase):
         if cfg.moe is not None:
             y, stats = moe_mod.moe_apply(lp["moe"], h2, cfg.moe, cfg.mlp_act,
                                          group_size=moe_group,
-                                         dispatch_impl=cfg.moe.dispatch)
+                                         dispatch_impl=cfg.moe.dispatch,
+                                         kernel_mode=cfg.moe.kernel_mode)
             aux = stats["aux_loss"]
         else:
             y = mlp_mod.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
@@ -408,7 +409,8 @@ class DenseLM(LMBase):
             if cfg.moe is not None:
                 y, _ = moe_mod.moe_apply(lp["moe"], h2, cfg.moe, cfg.mlp_act,
                                          group_size=h2.shape[0],
-                                         dispatch_impl=cfg.moe.dispatch)
+                                         dispatch_impl=cfg.moe.dispatch,
+                                         kernel_mode=cfg.moe.kernel_mode)
             else:
                 y = mlp_mod.mlp_apply(lp["mlp"], h2, cfg.mlp_act)
             return xx + y, (ck, cv)

@@ -58,7 +58,8 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
               expert_mask: Optional[jax.Array] = None,
               dispatch_impl: str = "dense",
               registers=None, axis_name: str = "expert",
-              capacity: Optional[int] = None
+              capacity: Optional[int] = None,
+              kernel_mode: Optional[str] = None
               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: [B, S, d] -> (y [B, S, d], stats).
 
@@ -87,6 +88,12 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
     depth — so the MoE data plane and the shell's interconnect share one
     implementation (and one plan semantics) instead of re-deriving ranks
     here.
+
+    ``kernel_mode`` (``repro.fabric.KernelMode`` or its string aliases)
+    selects the fabric's kernel *lowering* on the fabric-backed impls —
+    resolved once when the geometry's fabric is first built, never inside
+    the traced call (docs/training.md).  The dense/gather impls have no
+    kernels and ignore it.
     """
     if dispatch_impl == "gather":
         return moe_apply_gather(params, x, moe, act, group_size=group_size,
@@ -94,11 +101,13 @@ def moe_apply(params, x: jax.Array, moe: MoEConfig, act: str, *,
     if dispatch_impl == "sharded":
         return moe_apply_sharded(params, x, moe, act, registers=registers,
                                  axis_name=axis_name,
-                                 expert_mask=expert_mask, capacity=capacity)
+                                 expert_mask=expert_mask, capacity=capacity,
+                                 kernel_mode=kernel_mode)
     if dispatch_impl != "dense":
         return moe_apply_fabric(params, x, moe, act, group_size=group_size,
                                 expert_mask=expert_mask,
-                                backend=dispatch_impl)
+                                backend=dispatch_impl,
+                                kernel_mode=kernel_mode)
     B, S, d = x.shape
     E, k = moe.n_experts, moe.top_k
     T = B * S
@@ -255,9 +264,23 @@ def moe_apply_gather(params, x: jax.Array, moe: MoEConfig, act: str, *,
     return y, stats
 
 
-@functools.lru_cache(maxsize=None)
 def _group_fabric(n_experts: int, capacity: int, backend: str,
-                  axis_name: Optional[str] = None):
+                  axis_name: Optional[str] = None,
+                  kernel_mode: Optional[str] = None):
+    """Normalizing front door for :func:`_group_fabric_cached`: ``"auto"``
+    and ``None`` both mean "the platform default" and must share one cache
+    key (lm-configured layers say ``"auto"``, direct callers say nothing —
+    they should hit the same fabric and the same trace counters)."""
+    if kernel_mode == "auto":
+        kernel_mode = None
+    return _group_fabric_cached(n_experts, capacity, backend, axis_name,
+                                kernel_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _group_fabric_cached(n_experts: int, capacity: int, backend: str,
+                         axis_name: Optional[str] = None,
+                         kernel_mode: Optional[str] = None):
     """One cached fabric (and its jit caches) per MoE geometry.
 
     The fabric reads its registers through a mutable cell so the caller
@@ -265,24 +288,34 @@ def _group_fabric(n_experts: int, capacity: int, backend: str,
     steer routing, the compiled dispatch/combine programs are reused
     across calls (and across layers sharing a geometry).  ``axis_name``
     selects the sharded backend's mesh axis (sharded fabrics are keyed
-    per axis so different meshes don't share WRR geometry)."""
+    per axis so different meshes don't share WRR geometry);
+    ``kernel_mode`` is the lowering seam (``repro.fabric.KernelMode``) —
+    part of the cache key, so two modes never share compiled programs."""
     from repro.core.registers import CrossbarRegisters
     from repro.fabric import Fabric
-    cell = {"regs": CrossbarRegisters.create(n_experts, capacity=capacity)}
+    # The cell must hold *concrete* registers even when the cache misses
+    # inside a jit/grad trace (e.g. the first call ever is a jitted train
+    # step): staged-out register arrays would be cached as dead tracers
+    # and poison every later trace with UnexpectedTracerError.
+    with jax.ensure_compile_time_eval():
+        cell = {"regs": CrossbarRegisters.create(n_experts,
+                                                 capacity=capacity)}
     kw = {"axis_name": axis_name} if axis_name is not None else {}
     fabric = Fabric(lambda: cell["regs"], backend=backend,
-                    capacity=capacity, **kw)
+                    capacity=capacity, kernel_mode=kernel_mode, **kw)
     return fabric, cell
 
 
 def moe_fabric(n_experts: int, capacity: int, backend: str,
-               axis_name: Optional[str] = None):
+               axis_name: Optional[str] = None,
+               kernel_mode: Optional[str] = None):
     """The cached ``Fabric`` a given MoE geometry dispatches through.
 
     Exposed so tests and telemetry can read ``fabric.trace_count`` (the
     zero-retrace-across-reconfiguration regression pin) or attach
     ``fabric.probe()`` for the layer that serves a geometry."""
-    return _group_fabric(n_experts, capacity, backend, axis_name)[0]
+    return _group_fabric(n_experts, capacity, backend, axis_name,
+                         kernel_mode)[0]
 
 
 def _moe_router(params, xf: jax.Array, moe: MoEConfig,
@@ -324,7 +357,8 @@ def _expert_ffn(slabs: jax.Array, w_in: jax.Array, w_out: jax.Array,
 def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
                      group_size: int = 1024,
                      expert_mask: Optional[jax.Array] = None,
-                     backend: str = "reference"
+                     backend: str = "reference",
+                     kernel_mode: Optional[str] = None
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """MoE dispatch as a ``repro.fabric`` transfer — one data-plane impl.
 
@@ -358,7 +392,7 @@ def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
     w = top_p.reshape(G, g * k).astype(x.dtype)
     cap = expert_capacity(g, moe)
 
-    fabric, cell = _group_fabric(E, cap, backend)
+    fabric, cell = _group_fabric(E, cap, backend, kernel_mode=kernel_mode)
     canonical = cell["regs"]
     # Fully specify the isolation mask every call — the cell is shared
     # across calls (and tenants) on this geometry, so nothing may inherit
@@ -403,7 +437,8 @@ def moe_apply_fabric(params, x: jax.Array, moe: MoEConfig, act: str, *,
 def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
                       registers=None, axis_name: str = "expert",
                       expert_mask: Optional[jax.Array] = None,
-                      capacity: Optional[int] = None
+                      capacity: Optional[int] = None,
+                      kernel_mode: Optional[str] = None
                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Mesh expert parallelism through the sharded fabric backend.
 
@@ -452,7 +487,7 @@ def moe_apply_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
     xf = x.reshape(T_loc, d)
     dst, w, probs = _moe_router(params, xf, moe, expert_mask)
 
-    fabric, _ = _group_fabric(E, cap, "sharded", axis_name)
+    fabric, _ = _group_fabric(E, cap, "sharded", axis_name, kernel_mode)
     xk = jnp.repeat(xf, k, axis=0)                         # [T_loc*k, d]
     src = jnp.zeros((T_loc * k,), jnp.int32)               # axis idx wins
 
@@ -564,7 +599,8 @@ def moe_apply_sharded_reference(params, x: jax.Array, moe: MoEConfig,
 def moe_forward_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
                         mesh, axis_name: str = "expert", registers=None,
                         expert_mask: Optional[jax.Array] = None,
-                        capacity: Optional[int] = None
+                        capacity: Optional[int] = None,
+                        kernel_mode: Optional[str] = None
                         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """The model-side shard_map wrapper around :func:`moe_apply_sharded`.
 
@@ -601,6 +637,7 @@ def moe_forward_sharded(params, x: jax.Array, moe: MoEConfig, act: str, *,
     def run(p, xs, regs, *mask):
         return moe_apply_sharded(
             p, xs, moe, act, registers=regs, axis_name=axis_name,
-            expert_mask=mask[0] if mask else None, capacity=cap)
+            expert_mask=mask[0] if mask else None, capacity=cap,
+            kernel_mode=kernel_mode)
 
     return run(*args)

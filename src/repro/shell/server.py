@@ -346,14 +346,22 @@ class ElasticServer:
         self.queue = collections.deque(
             r for r in self.queue if r.app_id != app_id)
 
-    def reset(self) -> None:
+    def reset(self, *, cold_cache: bool = False) -> None:
         """Return the server to an empty, tick-zero state for the next
         scenario: queue, slots, completions and the stall latch clear, and
         the shell-bound fabric's cumulative accounting resets with it —
         previously a reused server leaked the old run's ``port_traffic``
         into the next scenario's first ``Signals`` window (the fabric owns
         those counters, so clearing server state alone was not enough).
-        Engines stay registered; the shell is untouched."""
+        Engines stay registered; the shell is untouched.
+
+        ``cold_cache=True`` also drops the plan cache's memoized entries
+        (not just its counters) — required for record→replay teardown,
+        where the replay's ``plan_cache_hit_rate`` must be bit-identical
+        to the recording: warm entries would turn the replay's first
+        offers into hits the recorded run counted as misses.  The default
+        stays warm so steady-state scenario *sequences* keep their decode
+        fast path."""
         self.queue.clear()
         self.slots = [None] * self.n_slots
         self.completions = []
@@ -362,7 +370,7 @@ class ElasticServer:
         self._rid_counter = itertools.count()
         self._routes_dirty = True
         self._active = 0
-        self.fabric.reset_accounting()
+        self.fabric.reset_accounting(cold_cache=cold_cache)
 
     # ---- telemetry ----------------------------------------------------
     def probe(self):
@@ -607,9 +615,9 @@ class ServerPool:
             finished.extend(srv.step())
         return finished
 
-    def reset(self) -> None:
+    def reset(self, *, cold_cache: bool = False) -> None:
         for srv in self.servers:
-            srv.reset()
+            srv.reset(cold_cache=cold_cache)
 
     # ---- aggregate views ----------------------------------------------
     @property

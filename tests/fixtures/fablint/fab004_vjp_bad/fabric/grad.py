@@ -1,0 +1,28 @@
+"""FAB004 fixture: custom_vjp entry points that break the pairing contract."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _warp(x, scale):
+    # wired below, but no public warp_bwd_ref oracle in this module
+    return x * scale
+
+
+def _warp_fwd(x, scale):
+    return _warp(x, scale), None
+
+
+def _warp_bwd(scale, res, g):
+    return (g * scale,)
+
+
+_warp.defvjp(_warp_fwd, _warp_bwd)
+
+
+@jax.custom_vjp
+def shift(x, delta):
+    # decorated but never wired: first jax.grad through it raises
+    return x + delta

@@ -1,0 +1,1 @@
+"""FAB004 fixture: kernel package whose custom_vjp lacks its bwd oracle."""

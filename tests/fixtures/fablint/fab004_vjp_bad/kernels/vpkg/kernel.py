@@ -1,0 +1,2 @@
+def scale_call(x, s):
+    return x * s

@@ -1,0 +1,22 @@
+"""custom_vjp core: wired, but the package ref.py has no scale_bwd_ref."""
+import functools
+
+import jax
+
+from . import kernel as _k
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _scale_core(x, s):
+    return _k.scale_call(x, s)
+
+
+def _scale_fwd(x, s):
+    return _scale_core(x, s), None
+
+
+def _scale_bwd(s, res, g):
+    return (g * s,)
+
+
+_scale_core.defvjp(_scale_fwd, _scale_bwd)

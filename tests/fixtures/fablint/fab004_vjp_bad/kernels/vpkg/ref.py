@@ -1,0 +1,2 @@
+def scale_ref(x, s):
+    return x * s

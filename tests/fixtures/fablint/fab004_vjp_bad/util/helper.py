@@ -1,0 +1,7 @@
+"""Out of data-plane scope: unwired custom_vjp here is NOT fablint's business."""
+import jax
+
+
+@jax.custom_vjp
+def free_fn(x):
+    return x

@@ -1,0 +1,31 @@
+"""FAB004 fixture: correctly paired custom_vjp entry points."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _warp(x, scale):
+    return x * scale
+
+
+def _warp_fwd(x, scale):
+    return _warp(x, scale), None
+
+
+def _warp_bwd(scale, res, g):
+    return (g * scale,)
+
+
+_warp.defvjp(_warp_fwd, _warp_bwd)
+
+
+def warp_bwd_ref(g, scale):
+    """Dense oracle for the backward: what tests bit-match against."""
+    return g * scale
+
+
+@jax.custom_vjp
+def suppressed_fn(x):  # fablint: disable=FAB004
+    return x

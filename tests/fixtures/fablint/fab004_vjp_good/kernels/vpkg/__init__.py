@@ -1,0 +1,1 @@
+"""FAB004 fixture: kernel package with fwd and bwd oracles paired."""

@@ -1,0 +1,6 @@
+def scale_ref(x, s):
+    return x * s
+
+
+def scale_bwd_ref(g, s):
+    return g * s

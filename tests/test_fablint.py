@@ -123,6 +123,28 @@ def test_fab004_conforming_seam_registrations_pass():
     assert _lint(FIX / "fab004_seams_good", select=["FAB004"]) == []
 
 
+def test_fab004_flags_unpaired_custom_vjp():
+    """A custom_vjp fabric entry point must wire ``F.defvjp(fwd, bwd)`` in
+    its module and ship a public ``{base}_bwd_ref`` dense oracle (in the
+    owning kernel package's ref.py for kernels/* files, else in the same
+    module).  Out-of-scope files (util/) are not fablint's business."""
+    vs = _lint(FIX / "fab004_vjp_bad", select=["FAB004"])
+    msgs = " | ".join(v.message for v in vs)
+    assert "`_warp` has no public `warp_bwd_ref`" in msgs
+    assert "`shift` never calls `shift.defvjp" in msgs
+    assert "`_scale_core` has no public `scale_bwd_ref`" in msgs
+    assert "ref.py" in msgs                  # kernels/* points at pkg ref.py
+    assert not any("util/helper.py" in v.path for v in vs)
+    assert len(vs) == 3
+
+
+def test_fab004_paired_custom_vjp_and_suppression_pass():
+    """defvjp-wired entry points with their bwd oracles (module-level for
+    fabric/, package ref.py for kernels/*) are clean; inline suppression
+    on the def line is honoured."""
+    assert _lint(FIX / "fab004_vjp_good", select=["FAB004"]) == []
+
+
 # ---------------------------------------------------------------------------
 # FAB005 — bare clip on addresses
 # ---------------------------------------------------------------------------

@@ -200,6 +200,31 @@ class TestServeHarness:
         assert second.completions == first.completions
         np.testing.assert_array_equal(srv.port_traffic, traffic_first)
 
+    def test_cold_cache_reset_replays_identical_cache_telemetry(self):
+        """Record -> replay must reproduce the *cache* telemetry bit for
+        bit, not just the tokens.  A plain ``reset()`` keeps plan-cache
+        entries warm (steady-state production restarts want that), so the
+        replay's first tick HITS where the recording MISSED and
+        ``plan_cache_hit_rate`` diverges; ``reset(cold_cache=True)``
+        drops the entries too, making the counter stream — hits, misses,
+        hit_rate in the ServeReport — replay-identical."""
+        srv = make_server(n_slots=8)
+        arrivals = front_loaded_arrivals(20, seed=8, max_new=4)
+        first = ServeHarness(srv, arrivals).run()
+        assert first.plan_cache_misses > 0
+
+        srv.reset()                               # warm: entries survive
+        warm = ServeHarness(srv, arrivals).run()
+        assert warm.token_digest == first.token_digest
+        assert warm.plan_cache_misses < first.plan_cache_misses
+
+        srv.reset(cold_cache=True)                # cold: true replay
+        replay = ServeHarness(srv, arrivals).run()
+        assert replay.token_digest == first.token_digest
+        assert replay.plan_cache_hits == first.plan_cache_hits
+        assert replay.plan_cache_misses == first.plan_cache_misses
+        assert replay.plan_cache_hit_rate == first.plan_cache_hit_rate
+
 
 # ----------------------------------------------------------------------
 # telemetry: admission percentiles + cache counters through Signals

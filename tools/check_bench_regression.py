@@ -104,6 +104,85 @@ def check_debug_off_guard(fresh: Path, max_ratio: float) -> list[str]:
     return failures
 
 
+def check_bwd_vs_fwd(fresh: Path, max_ratio: float) -> list[str]:
+    """Gate the differentiable-fabric guard rows within the fresh file.
+
+    Each ``bwd_vs_fwd`` row (benchmarks/fabric_bench.py) times a full
+    ``value_and_grad`` of the transfer round trip against its forward on
+    the same machine, and inspects the compiled grad HLO.  The custom VJP
+    keeps the backward address-routed, so the ratio must stay <=
+    ``max_ratio`` and ``bwd_dense_routing_bytes`` must be exactly 0 (a
+    dense [T, S*C] routing tensor in the backward is the regression this
+    gate exists to catch).  Absent rows are fine (older trajectories
+    predate the guard)."""
+    failures = []
+    for key, row in sorted(load_rows(fresh, "bwd_vs_fwd").items()):
+        tag = f"bwd_vs_fwd T={key[0]} n_ports={key[1]}"
+        ratio = float(row.get("bwd_vs_fwd", float("inf")))
+        routing = int(row.get("bwd_dense_routing_bytes", -1))
+        verdict = "ok"
+        if ratio > max_ratio:
+            verdict = "FAIL (backward too slow)"
+            failures.append(tag)
+        if routing != 0:
+            verdict = "FAIL (dense routing tensor in grad HLO)"
+            failures.append(tag + " routing")
+        print(f"  {tag}: grad/forward {ratio:.3f}x (max {max_ratio}), "
+              f"bwd_dense_routing_bytes={routing} {verdict}")
+    return failures
+
+
+def check_moe(moe_json: Path, max_ratio: float) -> list[str]:
+    """Gate the fresh BENCH_moe.json train-grad rows within-file.
+
+    - the fabric-routed grads ("reference", "pallas") must show
+      ``bwd_overhead <= max_ratio``: their grad-vs-gather ratio stays
+      within ``max_ratio`` of their own forward-vs-gather ratio — i.e.
+      the custom-VJP backward prices like the inline-gather backward,
+      with the forward's pre-existing plan/interpret overhead (already
+      gated by the forward rows) normalized out.  Machine-neutral: every
+      term is measured within the same file on the same machine;
+    - their backward HLO must contain no dense [T*k, E*C] routing tensor
+      (``bwd_dense_routing_bytes == 0``);
+    - every impl's grads must agree with the probe (``grad_agrees``);
+    - the "dense" row must show a *non-zero* routing-bytes reading — it
+      is the positive control proving the HLO detector still fires.
+    A file without train_grad rows fails: the bench not producing its
+    gated rows is itself a regression."""
+    failures = []
+    rows = [r for r in json.loads(moe_json.read_text()).get("rows", [])
+            if r.get("mode") == "train_grad"]
+    if not rows:
+        print(f"  moe: no train_grad rows in {moe_json} FAIL")
+        return ["moe train_grad rows missing"]
+    for row in rows:
+        impl = row.get("impl")
+        tag = f"moe train_grad {impl} T={row.get('T')} E={row.get('E')}"
+        overhead = float(row.get("bwd_overhead", float("inf")))
+        grad_ratio = float(row.get("vs_gather_grad", float("inf")))
+        routing = int(row.get("bwd_dense_routing_bytes", -1))
+        agrees = bool(row.get("grad_agrees", False))
+        verdict = "ok"
+        if not agrees:
+            verdict = "FAIL (grads disagree)"
+            failures.append(tag + " agreement")
+        if impl in ("reference", "pallas"):
+            if overhead > max_ratio:
+                verdict = "FAIL (backward slower than its forward implies)"
+                failures.append(tag)
+            if routing != 0:
+                verdict = "FAIL (dense routing tensor in grad HLO)"
+                failures.append(tag + " routing")
+        elif impl == "dense" and routing <= 0:
+            verdict = "FAIL (detector no longer fires on dense)"
+            failures.append(tag + " detector")
+        print(f"  {tag}: bwd_overhead {overhead:.3f}x (max {max_ratio}; "
+              f"grad vs gather {grad_ratio:.3f}x), "
+              f"bwd_dense_routing_bytes={routing}, grad_agrees={agrees} "
+              f"{verdict}")
+    return failures
+
+
 def check_serve(serve_json: Path, max_ratio: float) -> list[str]:
     """Gate the serve trajectory within one file (machine-neutral).
 
@@ -268,6 +347,17 @@ def main(argv=None) -> int:
     ap.add_argument("--debug-guard-max-ratio", type=float, default=1.25,
                     help="fail if debug=False costs more than this times "
                          "a plain fabric (fresh-file debug_off_guard rows)")
+    ap.add_argument("--bwd-fwd-max-ratio", type=float, default=5.0,
+                    help="fail if a value_and_grad of transfer costs more "
+                         "than this times its forward (fresh-file "
+                         "bwd_vs_fwd rows)")
+    ap.add_argument("--moe-json", type=Path, default=None,
+                    help="also gate a fresh BENCH_moe.json within-file: "
+                         "fabric-routed train grads price like the inline-"
+                         "gather grad and keep an address-routed backward")
+    ap.add_argument("--moe-grad-max-ratio", type=float, default=1.25,
+                    help="fail if a fabric-routed train grad costs more "
+                         "than this times the inline-gather grad")
     ap.add_argument("--serve-json", type=Path, default=None,
                     help="also gate a fresh BENCH_serve.json within-file: "
                          "cached decode tick, bit-identity, storm retraces")
@@ -288,6 +378,9 @@ def main(argv=None) -> int:
         print(f"no '{args.backend}' rows in {args.committed}; nothing to gate")
         failures = check_debug_off_guard(args.fresh,
                                          args.debug_guard_max_ratio)
+        failures += check_bwd_vs_fwd(args.fresh, args.bwd_fwd_max_ratio)
+        if args.moe_json is not None:
+            failures += check_moe(args.moe_json, args.moe_grad_max_ratio)
         if args.serve_json is not None:
             failures += check_serve(args.serve_json, args.serve_max_ratio)
         if args.manager_json is not None:
@@ -320,6 +413,9 @@ def main(argv=None) -> int:
 
     failures += check_debug_off_guard(args.fresh,
                                       args.debug_guard_max_ratio)
+    failures += check_bwd_vs_fwd(args.fresh, args.bwd_fwd_max_ratio)
+    if args.moe_json is not None:
+        failures += check_moe(args.moe_json, args.moe_grad_max_ratio)
     if args.serve_json is not None:
         failures += check_serve(args.serve_json, args.serve_max_ratio)
     if args.manager_json is not None:

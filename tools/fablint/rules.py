@@ -618,6 +618,7 @@ class BackendSeamConformance(Rule):
             yield from self._check_class(entry[0], entry[1], expected)
         yield from self._check_seam_registries(project, classes)
         yield from self._check_kernels(project)
+        yield from self._check_custom_vjp(project)
 
     def _reference_signatures(self, classes) -> Dict[str, List[str]]:
         entry = classes.get("ReferenceBackend")
@@ -769,6 +770,76 @@ class BackendSeamConformance(Rule):
         return [n.name for n in src.tree.body
                 if isinstance(n, ast.FunctionDef)
                 and not n.name.startswith("_") and n.name.endswith(suffix)]
+
+    # ---- custom_vjp pairing (differentiable fabric entry points) ------
+    @staticmethod
+    def _is_custom_vjp_decorator(deco: ast.AST) -> bool:
+        """``@jax.custom_vjp`` / ``@custom_vjp`` or the nondiff form
+        ``@functools.partial(jax.custom_vjp, nondiff_argnums=...)``."""
+        if _dotted(deco).split(".")[-1] == "custom_vjp":
+            return True
+        if isinstance(deco, ast.Call) and \
+                _dotted(deco.func).split(".")[-1] == "partial" and deco.args:
+            return _dotted(deco.args[0]).split(".")[-1] == "custom_vjp"
+        return False
+
+    @staticmethod
+    def _bwd_oracle_name(fn_name: str) -> str:
+        base = fn_name.lstrip("_")
+        if base.endswith("_core"):
+            base = base[: -len("_core")]
+        return base + "_bwd_ref"
+
+    def _check_custom_vjp(self, project: Project) -> Iterator[Violation]:
+        """Every custom_vjp entry point in data-plane scope must wire its
+        rules (``F.defvjp(fwd, bwd)`` in the same module) and ship a public
+        ``{base}_bwd_ref`` dense oracle — in the owning kernel package's
+        ref.py for ``kernels/*/`` files, else in the same module.  A custom
+        backward that only exists as a trace-time transform cannot be
+        property-tested for bit-equality against the dense plan; the oracle
+        is what tests/test_fabric_grad.py sweeps against."""
+        ref_by_pkg: Dict[str, SourceFile] = {}
+        for src in project.files:
+            m = re.match(r"(.*kernels/[^/]+)/ref\.py$", src.rel)
+            if m:
+                ref_by_pkg[m.group(1)] = src
+        for src in project.files:
+            if not _DATA_PLANE_RE.search(src.rel):
+                continue
+            defvjp_wired = set()
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.Call) and len(node.args) >= 2:
+                    d = _dotted(node.func)
+                    if d.endswith(".defvjp"):
+                        defvjp_wired.add(d[: -len(".defvjp")])
+            pkg = re.match(r"(.*kernels/[^/]+)/[^/]+\.py$", src.rel)
+            local_public = set(self._public_defs(src))
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.FunctionDef):
+                    continue
+                if not any(self._is_custom_vjp_decorator(d)
+                           for d in node.decorator_list):
+                    continue
+                if node.name not in defvjp_wired:
+                    yield from self._emit(
+                        src, node,
+                        f"custom_vjp entry point `{node.name}` never calls "
+                        f"`{node.name}.defvjp(fwd, bwd)` in this module — "
+                        f"an unwired custom_vjp fails at first grad")
+                    continue
+                oracle = self._bwd_oracle_name(node.name)
+                where = "this module"
+                found = oracle in local_public
+                if pkg is not None and pkg.group(1) in ref_by_pkg:
+                    where = f"{pkg.group(1)}/ref.py"
+                    found = oracle in self._public_defs(
+                        ref_by_pkg[pkg.group(1)])
+                if not found:
+                    yield from self._emit(
+                        src, node,
+                        f"custom_vjp entry point `{node.name}` has no "
+                        f"public `{oracle}` dense oracle in {where} — the "
+                        f"backward cannot be bit-tested against the plan")
 
 
 # ----------------------------------------------------------------------
